@@ -1,0 +1,43 @@
+"""Paper Fig. 4: NoC topology/width/frequency sweep on 64x64 tiles.
+
+Expected trends: mesh width 2x -> ~2x perf; torus ~2.6x geomean over 32-bit
+mesh (up to ~8x for SPMV); hierarchical torus adds ~+9% perf and ~+19%
+energy efficiency; 2GHz NoC adds little perf (~3%) at 3x cost.
+"""
+from __future__ import annotations
+
+from repro.core import EngineConfig, TileGrid
+
+from .common import emit, improvements, load_datasets, sweep
+
+ROWS = COLS = 64
+DIE = 16  # 16 chiplets of 16x16 tiles (paper: 16 chiplets of 32x32)
+
+
+def configs():
+    def grid(topo, width=64, freq=1.0):
+        return TileGrid(ROWS, COLS, topology=topo, die_rows=DIE, die_cols=DIE,
+                        noc_width_bits=width, noc_freq_ghz=freq)
+    return {
+        "mesh32": EngineConfig(grid=grid("mesh", 32)),
+        "mesh64": EngineConfig(grid=grid("mesh", 64)),
+        "torus64": EngineConfig(grid=grid("torus", 64)),
+        "hier64": EngineConfig(grid=grid("hier_torus", 64)),
+        "hier64_2ghz": EngineConfig(grid=grid("hier_torus", 64, 2.0)),
+    }
+
+
+def main(scale: int = 16):
+    data = load_datasets(scale)
+    rows = sweep(configs(), data)
+    out = []
+    for metric in ("teps", "teps_per_watt", "teps_per_dollar"):
+        imp = improvements(rows, "mesh32", metric)
+        for c, v in imp.items():
+            out.append(("fig4", c, metric, f"{v:.3f}"))
+    emit(out, "figure,config,metric,geomean_improvement_over_mesh32")
+    return rows, out
+
+
+if __name__ == "__main__":
+    main()

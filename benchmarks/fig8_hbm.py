@@ -1,0 +1,70 @@
+"""Paper Fig. 8/9: DCRA-SRAM vs Dalorex vs DCRA-HBM (packaging-time knob).
+
+Each system runs at the smallest parallelization where the dataset fits:
+DCRA-HBM (8MB/PU incl. HBM) smallest grid, Dalorex (2MB SRAM/tile) 4x tiles,
+DCRA-SRAM (512KB/tile) 16x tiles. Expected: DCRA-SRAM fastest (most
+scaled-out); DCRA-HBM best TEPS/$ nearly across the board; energy mixed.
+Also emits the Fig. 9 energy breakdown (PU / memory / NoC shares).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import EngineConfig, TileGrid
+from repro.core.cache import DRAMConfig, SRAMConfig
+from repro.costmodel.silicon import monolithic_wafer_cost
+
+from .common import config_cost, emit, evaluate, load_datasets, APPS
+
+
+def _grid_for(n_tiles: int, die: int = 16) -> TileGrid:
+    side = max(int(math.sqrt(n_tiles)), die)
+    return TileGrid(side, side, "hier_torus", die_rows=die, die_cols=die)
+
+
+def systems(dataset_bytes: float):
+    """Size each system to the smallest grid where the dataset fits."""
+    def tiles_needed(bytes_per_tile):
+        return max(256, 1 << math.ceil(math.log2(dataset_bytes
+                                                 / bytes_per_tile)))
+    hbm_tiles = tiles_needed(8 * 2**20)          # 8MB/PU with HBM
+    dal_tiles = hbm_tiles * 4                     # 2MB SRAM/tile
+    sram_tiles = dal_tiles * 4                    # 512KB SRAM/tile
+    return {
+        "DCRA-HBM": EngineConfig(
+            grid=_grid_for(hbm_tiles), sram=SRAMConfig(kb_per_tile=512),
+            dram=DRAMConfig(present=True)),
+        "Dalorex": EngineConfig(
+            grid=_grid_for(dal_tiles, die=64).with_(topology="torus"),
+            sram=SRAMConfig(kb_per_tile=2048),
+            dram=DRAMConfig(present=False)),
+        "DCRA-SRAM": EngineConfig(
+            grid=_grid_for(sram_tiles), sram=SRAMConfig(kb_per_tile=512),
+            dram=DRAMConfig(present=False)),
+    }
+
+
+def main(scale: int = 16):
+    data = load_datasets(scale)
+    out = []
+    for dname, g in data.items():
+        cfgs = systems(g.memory_bytes())
+        for cname, cfg in cfgs.items():
+            cost = (monolithic_wafer_cost() if cname == "Dalorex"
+                    else config_cost(cfg))
+            for app in APPS:
+                r = evaluate(cfg, g, app, cost_usd=cost)
+                out.append(("fig8", cname, dname, app, f"{r.teps:.3e}",
+                            f"{r.teps_per_dollar:.3e}",
+                            f"{r.teps_per_watt:.3e}"))
+                b = r.breakdown
+                out.append(("fig9", cname, dname, app,
+                            f"pu={b.pu_j / b.total_j:.2f}",
+                            f"mem={b.memory_j / b.total_j:.2f}",
+                            f"noc={b.noc_j / b.total_j:.2f}"))
+    emit(out, "figure,system,dataset,app,teps|pu,teps_per_usd|mem,teps_per_w|noc")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Roofline terms per (arch x shape) from the dry-run compiled artifacts.
+
+Reads the cached dry-run results (launch/dryrun.py writes
+``/root/repo/dryrun_results.json``); if absent, emits a pointer instead of
+recomputing (the 512-device dry-run is its own entry point).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def main():
+    path = os.path.abspath(RESULTS)
+    if not os.path.exists(path):
+        print(f"roofline_table,SKIPPED,run `PYTHONPATH=src python -m "
+              f"repro.launch.dryrun` first (writes {path})")
+        return []
+    with open(path) as f:
+        rows = json.load(f)
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+          "model_flops_ratio,bytes_per_device")
+    out = []
+    for r in rows:
+        if "error" in r:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},ERROR,,,{r['error'][:60]},,")
+            continue
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},SKIP,,,"
+                  f"{r['skipped'][:60]},,")
+            continue
+        if r.get("tag"):
+            continue   # hillclimb variants belong to §Perf
+        line = (f"{r['arch']},{r['shape']},{r['mesh']},"
+                f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+                f"{r['collective_s']:.3e},{r['bottleneck']},"
+                f"{r.get('model_flops_ratio', 0):.3f},"
+                f"{r.get('bytes_per_device', 0):.3e}")
+        print(line)
+        out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    main()

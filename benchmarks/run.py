@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §8).
+
+``python -m benchmarks.run [--scale N] [--quick]`` runs every figure and
+prints CSV blocks. --quick uses small graphs (CI); default scale=16 matches
+the paper's vertices-per-tile regime (see DESIGN.md §2 scaling note).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="scale-12 graphs, skip the slowest sweeps")
+    args = ap.parse_args()
+    scale = 12 if args.quick else args.scale
+
+    from . import (fig4_topology, fig5_sram, fig6_pus, fig7_freq, fig8_hbm,
+                   fig10_queues, fig11_scaling, moe_dispatch, roofline_table)
+
+    figs = [
+        ("fig4_topology", lambda: fig4_topology.main(scale)),
+        ("fig5_sram", lambda: fig5_sram.main(scale)),
+        ("fig6_pus", lambda: fig6_pus.main(scale)),
+        ("fig7_freq", lambda: fig7_freq.main(scale)),
+        ("fig8_hbm", lambda: fig8_hbm.main(scale)),
+        ("fig10_queues", lambda: fig10_queues.main(scale)),
+        ("fig11_scaling", lambda: fig11_scaling.main(scale)),
+        ("moe_dispatch", moe_dispatch.main),
+        ("roofline_table", roofline_table.main),
+    ]
+    for name, fn in figs:
+        t = time.time()
+        print(f"== {name} ==", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the suite running
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+        print(f"# {name} took {time.time() - t:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

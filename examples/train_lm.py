@@ -1,0 +1,74 @@
+"""End-to-end driver (deliverable b): train a ~100M-param decoder LM for a
+few hundred steps with checkpointing + fault-tolerant loop.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+~100M params: 8 layers x d_model 512 x d_ff 2048, vocab 32000 (granite
+family scaled). Loss should drop from ~10.4 to well under 8 on the
+synthetic zipf stream.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import synth_batch
+from repro.models import build_model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.fault_tolerance import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("granite-8b"),
+        name="granite-100m", num_layers=8, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        scan_layers=True)
+    model = build_model(cfg)
+    print(f"model: {cfg.param_count() / 1e6:.0f}M params")
+    opt = AdamW(lr=cosine_schedule(peak_lr=6e-4, warmup=30,
+                                   total=args.steps))
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    def init_state():
+        params = model.init(jax.random.key(0))
+        return params, opt.init(params)
+
+    def batch_fn(step):
+        raw = synth_batch(cfg, shape, step)
+        return {k: jnp.asarray(np.minimum(v, cfg.vocab_size - 1)
+                               if k in ("tokens", "labels") else v)
+                for k, v in raw.items()}
+
+    t0 = time.time()
+    res = run_training(step_fn, init_state, batch_fn, args.steps,
+                       args.ckpt_dir, ckpt_every=100)
+    dt = time.time() - t0
+    first = res.metrics_history[0]["ce"]
+    last = np.mean([m["ce"] for m in res.metrics_history[-10:]])
+    print(f"CE {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

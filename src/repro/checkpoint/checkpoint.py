@@ -1,0 +1,97 @@
+"""Mesh-agnostic checkpointing with atomic writes and elastic restore.
+
+Design (DESIGN.md §6):
+* leaves are saved as ``.npy`` files keyed by pytree path, plus a json
+  manifest (step, tree structure, dtypes) — no pickle, portable;
+* writes go to ``<dir>.tmp`` then ``os.replace`` -> crash/preemption safe;
+* restore is MESH-AGNOSTIC: arrays are loaded on host then device_put with
+  the *target* sharding, so a checkpoint from N devices restores onto M
+  (elastic rescale) — the paper's "same dies, different packaging" applied
+  to training state;
+* ``keep`` oldest-eviction retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Save pytree; returns the final directory path."""
+    dest = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = dest + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(tree)
+    manifest = {"step": step, "keys": []}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["keys"].append({"key": key, "file": fname,
+                                 "dtype": str(arr.dtype),
+                                 "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(dest):
+        shutil.rmtree(dest)
+    os.replace(tmp, dest)      # atomic publish
+    _evict(ckpt_dir, keep)
+    return dest
+
+
+def _evict(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``target`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedSharding for elastic placement onto the current mesh."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {e["key"]: e for e in manifest["keys"]}
+    flat_t, treedef = _flatten(target)
+    flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = []
+    for key, leaf in flat_t.items():
+        e = by_key[key]
+        arr = np.load(os.path.join(src, e["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"target {leaf.shape}")
+        sh = flat_s.get(key)
+        out.append(jax.device_put(arr.astype(leaf.dtype), sh)
+                   if sh is not None else
+                   jax.device_put(arr.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)

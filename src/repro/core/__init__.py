@@ -1,0 +1,9 @@
+# The paper's primary contribution, adapted to TPU/JAX (see DESIGN.md):
+# task-based PGAS execution (task_engine), software-reconfigurable torus
+# topology model (topology), queue & SRAM-cache models (queues, cache), and
+# the DCRA owner-routed hierarchical MoE dispatch (dispatch).
+from .cache import CacheModel, DRAMConfig, SRAMConfig          # noqa: F401
+from .dispatch import MeshInfo, moe_dcra                        # noqa: F401
+from .queues import QueueConfig, QueueStats                     # noqa: F401
+from .task_engine import EngineConfig, RunStats, TaskEngine     # noqa: F401
+from .topology import TileGrid                                  # noqa: F401

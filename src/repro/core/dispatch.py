@@ -1,0 +1,319 @@
+"""DCRA task-routed MoE dispatch (the paper's technique as an LM feature).
+
+Mapping (DESIGN.md §3): tokens = task invocations, experts = tiles owning
+data, top-k routing = task spawning, expert capacity = IQ size (overflow is
+dropped and carried by the residual — the paper's queue-overflow semantics),
+and the dispatch all-to-all is the NoC. The *hierarchical* path performs a
+two-stage all-to-all — intra-pod over the ``expert`` axis (tile-NoC), then
+across pods over the ``pod`` axis (die-NoC) — the paper's §III-A two-level
+torus: long-distance traffic is aggregated at a per-pod "portal", exactly
+one die-NoC hop, instead of every tile talking across the package boundary.
+
+Only the payload (x) and the local-expert id travel; source-slot and gate
+metadata stay on the devices that need them for the return path, so the
+collective bytes are the minimum the routing requires.
+
+Everything is built from ``segment_sum`` scatter/gather (differentiable) and
+``jax.lax.all_to_all`` under ``shard_map``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:                                     # jax >= 0.7 exposes jax.shard_map
+    shard_map = jax.shard_map
+except AttributeError:                   # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    data_axis: str = "data"
+    expert_axis: str = "expert"
+    tp_axis: str = "tp"
+    pod_axis: Optional[str] = None       # set on the multi-pod mesh
+    hierarchical: bool = True            # 2-stage a2a when experts span pods
+    fsdp: bool = True                    # expert weights sharded over data
+    fuse_tp: bool = True                 # fold tp into the expert group when
+                                         # E divides (no psum, no seq gather)
+
+    def axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(name, (tuple, list)):
+            out = 1
+            for n in name:
+                out *= sizes[n]
+            return out
+        return sizes[name]
+
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    def dispatch_plan(self, num_experts: int):
+        """How experts map onto the mesh — the packaging-time knob.
+
+        Returns (group_axes_in_pod, spans_pods, tp_shards_ffn):
+        * group_axes_in_pod: tuple of axes whose devices each own E/K experts
+          (the stage-1 / tile-NoC all-to-all group);
+        * spans_pods: stage-2 over the pod axis (die-NoC) is needed;
+        * tp_shards_ffn: tp is NOT in the group -> expert FFN dim is
+          tp-sharded (partial-F psum) and seq must be gathered over tp.
+        """
+        n_ex = self.axis_size(self.expert_axis)
+        n_tp = self.axis_size(self.tp_axis)
+        n_pod = self.axis_size(self.pod_axis)
+        has_pod = self.pod_axis is not None and n_pod > 1
+        cands = []
+        if self.fuse_tp:
+            if has_pod and self.hierarchical:
+                cands.append(((self.expert_axis, self.tp_axis), True))
+            cands.append(((self.expert_axis, self.tp_axis), False))
+        if has_pod and self.hierarchical:
+            cands.append(((self.expert_axis,), True))
+        cands.append(((self.expert_axis,), False))
+        for group, spans in cands:
+            total = self.axis_size(group) * (n_pod if spans else 1)
+            if num_experts % total == 0:
+                return group, spans, self.tp_axis not in group
+        return (self.expert_axis,), False, True
+
+
+def _round8(x: int) -> int:
+    return max(8, -(-x // 8) * 8)
+
+
+def _positions_by_dest(dest, valid, n_buckets):
+    """Stable position of each *valid* task within its destination bucket."""
+    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)
+    onehot = onehot * valid[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+
+
+def _slot_scatter(data, slot, valid, num_slots):
+    """Scatter rows of ``data`` into slots (each slot receives <= 1 row)."""
+    seg = jnp.where(valid, slot, num_slots)
+    if data.ndim > 1:
+        data = data * valid[:, None].astype(data.dtype)
+    else:
+        data = data * valid.astype(data.dtype)
+    return jax.ops.segment_sum(data, seg, num_segments=num_slots + 1)[:num_slots]
+
+
+def _bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap):
+    """Capacity-bounded bucketing (the IQ). Returns (xb, ints, pos, n_drop).
+
+    xb [n_buckets*cap, D]; ints: like aux_ints but slot-ordered (-1 = empty);
+    also returns each task's slot (-1 if dropped) for building return maps.
+    """
+    pos = _positions_by_dest(dest, valid, n_buckets)
+    keep = valid & (pos < cap)
+    slot = dest * cap + jnp.minimum(pos, cap - 1)
+    total = n_buckets * cap
+    xb = _slot_scatter(x_tasks, slot, keep, total)
+    ints = [_slot_scatter((a + 1).astype(jnp.int32), slot, keep, total) - 1
+            for a in aux_ints]
+    task_slot = jnp.where(keep, slot, -1)
+    n_drop = jnp.sum(valid & ~keep)
+    return xb, ints, task_slot, n_drop
+
+
+def _a2a(x, axis):
+    return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
+
+
+def _expert_ffn(xe, wg, wu, wd, tp_axis, n_tp):
+    """xe [E_l, C, D]; wg/wu [E_l, D, F_l]; wd [E_l, F_l, D] -> [E_l, C, D]."""
+    dt = xe.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg.astype(dt))) * \
+        jnp.einsum("ecd,edf->ecf", xe, wu.astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+    if n_tp > 1:
+        y = jax.lax.psum(y, tp_axis)   # F is tp-sharded -> partial sums
+    return y
+
+
+def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
+    """DCRA owner-routed dispatch. x [B, S, D] -> (out [B,S,D], aux [])."""
+    mc = cfg.moe
+    assert mc is not None
+    E = mc.num_experts
+    group, spans_pods, tp_ffn = info.dispatch_plan(E)
+    n_group = info.axis_size(group)
+    n_pod = info.axis_size(info.pod_axis) if spans_pods else 1
+    n_ex = n_group
+    E_local = E // (n_group * n_pod)
+    n_tp = info.axis_size(info.tp_axis) if tp_ffn else 1
+
+    batch_ax = ((info.pod_axis, info.data_axis) if info.pod_axis
+                else info.data_axis)
+
+    def _div(n, ax):
+        return ax is not None and n % info.axis_size(ax) == 0
+
+    b_in, s_in, _ = x.shape
+    if not _div(b_in, batch_ax):       # tiny-batch decode fallbacks
+        batch_ax = info.data_axis if _div(b_in, info.data_axis) else None
+    # Preferred: seq sharded over the WHOLE dispatch group (+tp when the
+    # FFN is tp-split) — tokens arrive distinct per shard, no pre-gather,
+    # no slice (the residual stream is already seq-sharded this way by SP).
+    grp = tuple(group) if isinstance(group, tuple) else (group,)
+    seq_group = grp + ((info.tp_axis,) if tp_ffn else ())
+    if _div(s_in, seq_group):
+        seq_ax, seq_mode = seq_group, "group"
+    elif _div(s_in, info.tp_axis) and info.axis_size(info.tp_axis) > 1:
+        seq_ax, seq_mode = info.tp_axis, "tp"
+    else:
+        seq_ax, seq_mode = None, None
+    x_spec = P(batch_ax, seq_ax, None)
+    e_dim = ((info.pod_axis,) + tuple(group) if spans_pods else
+             (group if isinstance(group, tuple) else (group,)))
+    e_dim = e_dim[0] if len(e_dim) == 1 else e_dim
+    f_axis = info.tp_axis if tp_ffn else None
+    d_axis = info.data_axis if info.fsdp else None
+    w_specs = (P(None, None),                 # router (replicated)
+               P(e_dim, d_axis, f_axis),      # wg
+               P(e_dim, d_axis, f_axis),      # wu
+               P(e_dim, f_axis, d_axis))      # wd
+
+    def kernel(router, wg, wu, wd, xb):
+        s_shard = xb.shape[1]
+        tp_gather = tp_ffn and n_tp > 1 and seq_mode is not None
+        if tp_gather:
+            # FFN is tp-split on F (partial psum): every tp rank must hold
+            # the same tokens -> gather the seq shards.
+            xb = jax.lax.all_gather(xb, info.tp_axis, axis=1, tiled=True)
+        b_l, s_l, D = xb.shape
+        T_l = b_l * s_l
+        xf = xb.reshape(T_l, D)
+        # In "group" seq mode tokens are already distinct per expert-rank.
+        # Otherwise the residual stream is REPLICATED over the expert axis
+        # (it serves as a TP axis for dense layers) — each expert-rank then
+        # dispatches only its 1/n_ex slice and the output is re-gathered.
+        n_slice = info.axis_size(info.expert_axis)
+        do_slice = (seq_mode != "group" and n_slice > 1
+                    and T_l % n_slice == 0)
+        if do_slice:
+            e_i = jax.lax.axis_index(info.expert_axis)
+            T_l = T_l // n_slice
+            xf = jax.lax.dynamic_slice_in_dim(xf, e_i * T_l, T_l, 0)
+        if info.fsdp:
+            wg = jax.lax.all_gather(wg, info.data_axis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, info.data_axis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, info.data_axis, axis=2, tiled=True)
+
+        # --- routing (task spawning) -----------------------------------
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, eids = jax.lax.top_k(probs, mc.top_k)        # [T_l, K]
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        K = mc.top_k
+        eids_f = eids.reshape(-1)
+        gates_f = gates.reshape(-1).astype(jnp.float32)
+        src_f = jnp.repeat(jnp.arange(T_l, dtype=jnp.int32), K)
+
+        owner = eids_f // E_local                           # global shard id
+        cap1 = _round8(int(T_l * K * mc.capacity_factor / n_ex))
+        all_valid = jnp.ones_like(eids_f, dtype=bool)
+
+        def _gather_rows(src_table, src_ids):
+            """rows = src_table[src_ids] with -1 -> zeros (one gather; no
+            K-fold payload replication before bucketing)."""
+            rows = src_table[jnp.maximum(src_ids, 0)]
+            return rows * (src_ids >= 0)[:, None].astype(rows.dtype)
+
+        if not spans_pods:
+            # ---- single-stage a2a (tile-NoC) ---------------------------
+            _, (eid1, tok1), slot_of_task, _ = _bucket(
+                src_f[:, None] * 0, owner, all_valid,
+                [eids_f % E_local, src_f], n_ex, cap1)
+            xb1 = _gather_rows(xf, tok1)
+            xr = _a2a(xb1, group)
+            eidr = _a2a(eid1, group)
+        else:
+            # ---- stage 1 over expert axis (tile-NoC) -------------------
+            e_coord = owner % n_ex
+            p_coord = owner // n_ex
+            _, (pc1, eid1, tok1), slot_of_task, _ = _bucket(
+                src_f[:, None] * 0, e_coord, all_valid,
+                [p_coord, eids_f % E_local, src_f], n_ex, cap1)
+            xb1 = _gather_rows(xf, tok1)
+            xs1 = _a2a(xb1, group)
+            pcs = _a2a(pc1, group)
+            eids1 = _a2a(eid1, group)
+            n1 = xs1.shape[0]
+            # ---- stage 2 over pod axis (die-NoC portal) ----------------
+            valid1 = pcs >= 0
+            cap2 = _round8(int(n1 * mc.capacity_factor / n_pod))
+            _, (eid2, slot1_of_s2), _, _ = _bucket(
+                pcs[:, None] * 0, jnp.maximum(pcs, 0), valid1,
+                [eids1, jnp.arange(n1, dtype=jnp.int32)], n_pod, cap2)
+            xb2 = _gather_rows(xs1, slot1_of_s2)
+            xr = _a2a(xb2, info.pod_axis)
+            eidr = _a2a(eid2, info.pod_axis)
+
+        # --- local expert execution (owner computes) --------------------
+        N_r = xr.shape[0]
+        validr = eidr >= 0
+        if E_local == 1:
+            ye = _expert_ffn(xr[None].astype(xb.dtype), wg, wu, wd,
+                             info.tp_axis, n_tp)[0]
+            ye = ye * validr[:, None].astype(ye.dtype)
+        else:
+            # second-level IQ: bucket received tasks by local expert
+            cap_e = _round8(int(mc.capacity_factor * N_r / E_local))
+            _, (srce,), _, _ = _bucket(
+                validr[:, None].astype(jnp.int32) * 0, jnp.maximum(eidr, 0),
+                validr, [jnp.arange(N_r, dtype=jnp.int32)], E_local, cap_e)
+            xe = _gather_rows(xr, srce)
+            ye_b = _expert_ffn(xe.reshape(E_local, cap_e, D).astype(xb.dtype),
+                               wg, wu, wd, info.tp_axis, n_tp)
+            ye = _slot_scatter(ye_b.reshape(E_local * cap_e, D),
+                               jnp.maximum(srce, 0), srce >= 0, N_r)
+
+        # --- return path (retrace the NoC route) ------------------------
+        if not spans_pods:
+            yb1 = _a2a(ye, group)
+        else:
+            y2 = _a2a(ye, info.pod_axis)                    # back to portal
+            y1 = _slot_scatter(y2, jnp.maximum(slot1_of_s2, 0),
+                               slot1_of_s2 >= 0, n1)
+            yb1 = _a2a(y1, group)                # back to source
+
+        # combine at the source: task slot -> token, weighted by gate
+        task_y = jnp.where(
+            (slot_of_task >= 0)[:, None],
+            yb1[jnp.maximum(slot_of_task, 0)], 0.0).astype(jnp.float32)
+        out = jax.ops.segment_sum(task_y * gates_f[:, None], src_f,
+                                  num_segments=T_l)
+
+        # aux: load-balance loss, averaged over all devices
+        frac = jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1).mean(0)
+        aux = E * jnp.sum(frac * probs.mean(0))
+        aux = jax.lax.pmean(aux, info.all_axes())
+        if do_slice:   # restore the expert-replicated layout
+            out = jax.lax.all_gather(out, info.expert_axis, axis=0,
+                                     tiled=True)
+        out = out.reshape(b_l, s_l, D).astype(x.dtype)
+        if tp_gather:   # slice back this rank's seq shard
+            tp_i = jax.lax.axis_index(info.tp_axis)
+            out = jax.lax.dynamic_slice_in_dim(out, tp_i * s_shard, s_shard,
+                                               axis=1)
+        return out, aux
+
+    fn = shard_map(kernel, mesh=info.mesh,
+                   in_specs=(*w_specs, x_spec),
+                   out_specs=(x_spec, P()),
+                   check_vma=False)
+    out, aux = fn(params["router"], params["wg"], params["wu"], params["wd"],
+                  x)
+    return out, aux

@@ -1,0 +1,44 @@
+"""Task queues (IQ/OQ) — DCRA Table II knob #8.
+
+Each task type has an input queue (IQ) at the consumer tile and an output
+queue (OQ) at the producer. The engine records per-round occupancies; the
+performance model converts overflow into producer stalls (the paper's
+Fig. 10 mechanism: undersized OQ2 stalls the upstream task at high fanout).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class QueueConfig:
+    iq_sizes: Dict[str, int] = field(default_factory=dict)
+    oq_sizes: Dict[str, int] = field(default_factory=dict)
+    default_iq: int = 12     # task-invocation messages (paper Fig. 10)
+    default_oq: int = 12
+
+    def iq(self, task: str) -> int:
+        return self.iq_sizes.get(task, self.default_iq)
+
+    def oq(self, task: str) -> int:
+        return self.oq_sizes.get(task, self.default_oq)
+
+
+@dataclass
+class QueueStats:
+    """Per-round aggregate queue pressure."""
+    peak_iq: Dict[str, int] = field(default_factory=dict)
+    peak_oq: Dict[str, int] = field(default_factory=dict)
+    total_tasks: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, task: str, per_tile_in: np.ndarray,
+               per_tile_out: np.ndarray):
+        self.peak_iq[task] = max(self.peak_iq.get(task, 0),
+                                 int(per_tile_in.max(initial=0)))
+        self.peak_oq[task] = max(self.peak_oq.get(task, 0),
+                                 int(per_tile_out.max(initial=0)))
+        self.total_tasks[task] = self.total_tasks.get(task, 0) + \
+            int(per_tile_in.sum())

@@ -1,0 +1,92 @@
+"""Causal flash attention Pallas TPU kernel.
+
+VMEM strategy (the DCRA scratchpad/cache split, DESIGN.md §2): the Q tile is
+scratchpad-resident across the KV sweep; K/V tiles stream HBM->VMEM like
+cache lines, with the BlockSpec index map acting as the hardware prefetcher.
+Online softmax keeps the [TQ, TK] logits tile in VMEM; causal tiles beyond
+the diagonal are skipped via the grid (no wasted MXU work).
+
+Tile sizes default to MXU-aligned 128x128 with hd lanes; fp32 accumulators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 128
+DEFAULT_TK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal, tq, tk):
+    i = pl.program_id(1)     # q tile
+    j = pl.program_id(2)     # kv tile
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_base = i * tq
+    k_base = j * tk
+    run = (not causal) or (k_base <= q_base + tq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                  # [TQ, hd]
+        k = k_ref[0]                                  # [TK, hd]
+        v = v_ref[0]
+        scale = q.shape[-1] ** -0.5
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = q_base + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            kj = k_base + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(kj <= qi, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                           interpret: bool = True):
+    """q,k,v: [BH, S, hd] (batch*heads flattened) -> [BH, S, hd]."""
+    BH, S, hd = q.shape
+    tq = min(tq, S)
+    tk = min(tk, S)
+    assert S % tq == 0 and S % tk == 0
+    grid = (BH, S // tq, S // tk)
+    kern = functools.partial(_flash_kernel, causal=causal, tq=tq, tk=tk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Histogram Pallas TPU kernel — the paper's Histogram app, TPU-native.
+
+Hardware adaptation (DESIGN.md §2): DCRA scatters (bin, +1) messages to the
+bin's owner tile. A TPU has no scatter unit — the MXU-native rendering is
+one-hot compare + matmul-reduce: each element block is compared against the
+bin-id lane vector (VPU), and the resulting one-hot matrix is summed down
+the element axis. Bins are tiled over the grid's second axis so arbitrarily
+many bins stream through VMEM; elements tile over the first axis and
+accumulate into the output block (revisited across steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ELEM_TILE = 1024
+BIN_TILE = 256
+
+
+def _hist_kernel(elems_ref, out_ref, *, bin_tile):
+    i = pl.program_id(0)       # element tile
+    j = pl.program_id(1)       # bin tile
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    elems = elems_ref[...]                                  # [ET]
+    base = j * bin_tile
+    bins = base + jax.lax.broadcasted_iota(jnp.int32, (1, bin_tile), 1)
+    onehot = (elems[:, None] == bins).astype(jnp.float32)   # [ET, BT]
+    out_ref[...] += jnp.sum(onehot, axis=0).astype(out_ref.dtype)
+
+
+def histogram_pallas(elements: jax.Array, n_bins: int,
+                     interpret: bool = True) -> jax.Array:
+    """elements: [N] int32 in [0, n_bins). Returns [n_bins] int32 counts."""
+    n = elements.shape[0]
+    et = min(ELEM_TILE, n)
+    bt = min(BIN_TILE, n_bins)
+    assert n % et == 0 and n_bins % bt == 0
+    grid = (n // et, n_bins // bt)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, bin_tile=bt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((et,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(elements.astype(jnp.int32))
+    return out

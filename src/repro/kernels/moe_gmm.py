@@ -1,0 +1,57 @@
+"""Grouped (expert) matmul Pallas TPU kernel — the MoE compute hot-spot.
+
+Layout contract matches the DCRA dispatch output: tokens arrive bucketed
+per expert in capacity-padded rows ([E * C, D] with C a multiple of the row
+tile), so each row tile belongs to exactly one expert. The expert id per
+row tile is *scalar-prefetched* (SMEM) and drives the weight BlockSpec
+index map — the TPU analogue of DCRA's TSU prefetching the task's operand
+arrays (paper §III-B) before the PU touches them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROW_TILE = 128
+F_TILE = 128
+
+
+def _gmm_kernel(gid_ref, x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[0],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def gmm_pallas(x: jax.Array, w: jax.Array, group_ids: jax.Array,
+               rt: int = ROW_TILE, ft: int = F_TILE,
+               interpret: bool = True) -> jax.Array:
+    """x [T, D] (expert-bucketed rows), w [E, D, F], group_ids [T // rt].
+
+    Returns out [T, F] with out[t] = x[t] @ w[group_ids[t // rt]].
+    """
+    T, D = x.shape
+    E, _, F = w.shape
+    rt = min(rt, T)
+    ft = min(ft, F)
+    assert T % rt == 0 and F % ft == 0
+    assert group_ids.shape[0] == T // rt
+    grid = (T // rt, F // ft)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, D), lambda i, j, gid: (i, 0)),
+            pl.BlockSpec((1, D, ft), lambda i, j, gid: (gid[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((rt, ft), lambda i, j, gid: (i, j)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, F), x.dtype),
+        interpret=interpret,
+    )(group_ids.astype(jnp.int32), x, w)

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for all Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so kernels execute
+via the Pallas interpreter for correctness; on TPU backends they lower to
+Mosaic. The wrappers are the only entry points the rest of the framework
+uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .histogram import histogram_pallas
+from .moe_gmm import gmm_pallas
+from .spmv import bsr_spmv_pallas, csr_to_bsr, spmv_csr
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def histogram(elements: jax.Array, n_bins: int) -> jax.Array:
+    return histogram_pallas(elements, n_bins, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    """q,k,v: [B, H, S, hd] -> [B, H, S, hd]."""
+    B, H, S, hd = q.shape
+    f = lambda a: a.reshape(B * H, S, hd)
+    out = flash_attention_pallas(f(q), f(k), f(v), causal=causal,
+                                 interpret=not _on_tpu())
+    return out.reshape(B, H, S, hd)
+
+
+@jax.jit
+def gmm(x, w, group_ids):
+    return gmm_pallas(x, w, group_ids, interpret=not _on_tpu())
+
+
+@jax.jit
+def bsr_spmv(block_cols, blocks, x):
+    return bsr_spmv_pallas(block_cols, blocks, x, interpret=not _on_tpu())
+
+
+__all__ = ["histogram", "flash_attention", "gmm", "bsr_spmv", "csr_to_bsr",
+           "spmv_csr"]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(elements: jax.Array, n_bins: int) -> jax.Array:
+    return jnp.bincount(elements.astype(jnp.int32), length=n_bins) \
+        .astype(jnp.int32)
+
+
+def bsr_spmv_ref(block_cols: jax.Array, blocks: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """Block-sparse-row SpMV oracle.
+
+    block_cols [R, Kb] int32 (block-column id per stored block; padding
+    entries must have zero-valued blocks); blocks [R, Kb, BS, BS];
+    x [N] with N = n_col_blocks * BS. Returns y [R * BS].
+    """
+    R, Kb, BS, _ = blocks.shape
+    xb = x.reshape(-1, BS)                       # [n_col_blocks, BS]
+    gathered = xb[block_cols]                    # [R, Kb, BS]
+    y = jnp.einsum("rkij,rkj->ri", blocks, gathered)
+    return y.reshape(-1)
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, group_ids: jax.Array) -> jax.Array:
+    """Grouped matmul oracle: out[t] = x[t] @ w[group_ids[t // BS]].
+
+    x [T, D]; w [E, D, F]; group_ids [T // BS] (expert of each row block).
+    """
+    T, D = x.shape
+    BS = T // group_ids.shape[0]
+    xg = x.reshape(-1, BS, D)
+    wg = w[group_ids]                            # [T//BS, D, F]
+    return jnp.einsum("bsd,bdf->bsf", xg, wg).reshape(T, -1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: [B, H, S, hd] -> [B, H, S, hd] (fp32 softmax)."""
+    S = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(v.dtype), v)

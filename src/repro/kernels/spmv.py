@@ -1,0 +1,99 @@
+"""Block-sparse-row SpMV Pallas TPU kernel — the paper's SPMV app.
+
+Hardware adaptation (DESIGN.md §2): DCRA processes CSR nonzeros with
+per-element task messages. The MXU equivalent blocks the matrix into
+BS x BS dense tiles (BSR); each row-block streams its nonzero tiles through
+VMEM and the needed x tile is fetched by a *scalar-prefetched* block-column
+index — the data-dependent gather becomes a prefetched BlockSpec index map
+(the TSU-prefetch analogue), and the multiply runs on the MXU.
+
+Padding contract: rows of ``block_cols`` are padded with index 0 and
+zero-valued blocks, so padded steps contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..sparse.csr import CSR
+
+
+def _spmv_kernel(bc_ref, blocks_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = blocks_ref[0, 0]                       # [BS, BS]
+    xb = x_ref[...]                            # [BS]
+    y_ref[...] += jnp.dot(a, xb, preferred_element_type=jnp.float32
+                          ).astype(y_ref.dtype)
+
+
+def bsr_spmv_pallas(block_cols: jax.Array, blocks: jax.Array, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """block_cols [R, Kb] int32; blocks [R, Kb, BS, BS]; x [Ncb * BS]."""
+    R, Kb, BS, _ = blocks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, Kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, BS, BS), lambda i, j, bc: (i, j, 0, 0)),
+            pl.BlockSpec((BS,), lambda i, j, bc: (bc[i, j],)),
+        ],
+        out_specs=pl.BlockSpec((BS,), lambda i, j, bc: (i,)),
+    )
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * BS,), x.dtype),
+        interpret=interpret,
+    )(block_cols.astype(jnp.int32), blocks, x)
+
+
+# ---------------------------------------------------------------------------
+# CSR -> BSR conversion (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+def csr_to_bsr(g: CSR, bs: int = 128):
+    """Convert CSR to padded BSR arrays for the kernel."""
+    n_rb = -(-g.n // bs)
+    n_cb = -(-g.n // bs)
+    rows = g.row_of()
+    rb = rows // bs
+    cb = g.col_idx // bs
+    key = rb * n_cb + cb
+    uniq = np.unique(key)
+    # blocks per row-block (padded to the max)
+    rb_of_blk = (uniq // n_cb).astype(np.int64)
+    counts = np.bincount(rb_of_blk, minlength=n_rb)
+    Kb = max(int(counts.max(initial=1)), 1)
+    block_cols = np.zeros((n_rb, Kb), np.int32)
+    blocks = np.zeros((n_rb, Kb, bs, bs), np.float32)
+    slot_of_key = {}
+    next_slot = np.zeros(n_rb, np.int64)
+    for u in uniq:
+        r = u // n_cb
+        slot_of_key[u] = next_slot[r]
+        block_cols[r, next_slot[r]] = u % n_cb
+        next_slot[r] += 1
+    slots = np.array([slot_of_key[k] for k in key], np.int64)
+    blocks[rb, slots, rows % bs, g.col_idx % bs] = g.values
+    return jnp.asarray(block_cols), jnp.asarray(blocks)
+
+
+def spmv_csr(g: CSR, x: np.ndarray, bs: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """End-to-end: CSR graph x dense vector via the BSR kernel."""
+    bc, blocks = csr_to_bsr(g, bs)
+    n_pad = ((g.n + bs - 1) // bs) * bs
+    xp = jnp.zeros((n_pad,), jnp.float32).at[:g.n].set(
+        jnp.asarray(x, jnp.float32))
+    y = bsr_spmv_pallas(bc, blocks, xp, interpret=interpret)
+    return y[:g.n]

@@ -1,0 +1,68 @@
+"""Production meshes — DCRA "packaging-time" composition (Table II #5-7).
+
+``make_production_mesh`` is the contract mesh: a 256-chip pod (16x16) or two
+pods (2x16x16). ``make_mesh_for`` refines the 16-way ``model`` axis into
+``expert x tp`` (8x2) for MoE architectures — same chips, different
+"packaging", exactly the paper's one-chiplet-many-products thesis.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType
+
+from ..configs.base import ArchConfig
+from ..core.dispatch import MeshInfo
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_moe_mesh(*, multi_pod: bool = False):
+    """model axis split into (expert, tp) for expert-parallel archs."""
+    shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+    axes = (("pod", "data", "expert", "tp") if multi_pod
+            else ("data", "expert", "tp"))
+    return _mk(shape, axes)
+
+
+def make_mesh_for(cfg: ArchConfig, *, multi_pod: bool = False):
+    if cfg.moe is not None:
+        return make_moe_mesh(multi_pod=multi_pod)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def mesh_info_for(cfg: ArchConfig, mesh, hierarchical: bool = True
+                  ) -> Optional[MeshInfo]:
+    names = mesh.axis_names
+    if cfg.moe is None:
+        return None
+    return MeshInfo(
+        mesh=mesh,
+        data_axis="data",
+        expert_axis="expert",
+        tp_axis="tp",
+        pod_axis="pod" if "pod" in names else None,
+        hierarchical=hierarchical,
+    )
+
+
+def model_axes(mesh) -> tuple:
+    """The tensor-parallel axis group of this mesh ('model' or expert+tp)."""
+    return (("model",) if "model" in mesh.axis_names else ("expert", "tp"))
+
+
+def batch_axes(mesh) -> tuple:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

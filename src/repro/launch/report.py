@@ -1,0 +1,66 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from
+dryrun_results.json."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skip: quadratic attn (DESIGN.md §5) | — | — |")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — |")
+    t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    frac = r["compute_s"] / t if t else 0.0
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | {r['bottleneck']} | "
+            f"{r['model_flops_ratio']:.2f} | "
+            f"{r.get('temp_size_in_bytes', 0) / 2**30:.1f} |")
+
+
+def roofline_table(results):
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | 6ND/HLO | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rs = sorted(results, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                        r["mesh"]))
+    for r in rs:
+        if r.get("tag"):
+            continue            # variants go to §Perf, not the baseline table
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def summary(results):
+    base = [r for r in results if "compute_s" in r and not r.get("tag")]
+    bn = defaultdict(int)
+    for r in base:
+        bn[r["bottleneck"]] += 1
+    compiled = len(base)
+    skipped = sum(1 for r in results if "skipped" in r)
+    errors = sum(1 for r in results if "error" in r)
+    peak = max((r.get("temp_size_in_bytes", 0) for r in base), default=0)
+    return (f"{compiled} cells compiled, {skipped} documented skips, "
+            f"{errors} errors; bottlenecks: {dict(bn)}; "
+            f"max temp/device {peak / 2**30:.1f} GiB")
+
+
+def main(path="dryrun_results.json"):
+    with open(path) as f:
+        results = json.load(f)
+    print(summary(results))
+    print()
+    print(roofline_table(results))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

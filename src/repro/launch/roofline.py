@@ -1,0 +1,114 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the spec:
+  compute_s    = HLO_FLOPs / (chips x 197e12)       [bf16 peak, v5e]
+  memory_s     = HLO_bytes / (chips x 819e9)
+  collective_s = collective_bytes / (chips x 50e9)
+
+XLA's cost analysis on the SPMD-partitioned module reports *per-device*
+numbers, so we treat them as such (global = per_device x chips; the chips
+cancel). collective_bytes is parsed from the compiled HLO text: the sum of
+result-shape bytes of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops (per-device wire bytes; all-reduce counted twice —
+reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from ..costmodel.params import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^a-z]", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind from compiled HLO."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2).lower()
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2          # RS + AG phases on the wire
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def model_flops_ratio(self, model_flops_global: float, chips: int
+                          ) -> float:
+        hlo_global = self.flops_per_device * chips
+        return model_flops_global / hlo_global if hlo_global else 0.0
+
+
+def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    mem_bytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    cb = float(sum(coll.values()))
+    return Roofline(
+        compute_s=flops / TPU_PEAK_BF16_FLOPS,
+        memory_s=mem_bytes / TPU_HBM_BW,
+        collective_s=cb / TPU_ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=mem_bytes,
+        coll_bytes_per_device=cb,
+        coll_breakdown=coll,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N_active*B per
+    decode token; prefill = forward only (2*N*D)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token

@@ -1,0 +1,64 @@
+"""Batched serving driver: prefill then greedy decode with the KV cache.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models.model_zoo import build_model
+
+
+def serve(cfg, model, params, prompts: jax.Array, gen: int):
+    """prompts [B, P] -> generated [B, gen] (greedy)."""
+    B, P = prompts.shape
+    cache = model.init_cache(B, P + gen, jnp.float32)
+    decode = jax.jit(model.decode_step)
+    # prefill by teacher-forcing the prompt through the decode path (keeps
+    # one compiled step; a chunked prefill kernel is the TPU optimization)
+    tok = prompts[:, :1]
+    for t in range(P + gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.array(t, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        tok = prompts[:, t + 1:t + 2] if t + 1 < P else nxt
+        if t == P - 1:
+            out = [tok]
+        elif t >= P:
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = serve(cfg, model, params, prompts, args.gen)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print(out[:, :8])
+
+
+if __name__ == "__main__":
+    main()

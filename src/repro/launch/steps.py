@@ -1,0 +1,74 @@
+"""train_step / serve_step builders — the units the dry-run lowers and the
+drivers execute."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.common import logical_axis_rules
+from ..models.model_zoo import BaseModel
+from ..optim.adamw import AdamW, AdamWState, cosine_schedule
+from .sharding import logical_rules
+
+
+def default_optimizer() -> AdamW:
+    return AdamW(lr=cosine_schedule())
+
+
+def make_train_step(model: BaseModel, opt: AdamW, mesh,
+                    shape: Optional[ShapeConfig] = None,
+                    accum_steps: int = 1):
+    rules = logical_rules(model.cfg, mesh, shape)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        with logical_axis_rules(rules):
+            if accum_steps == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            else:
+                def micro(c, mb):
+                    (l, m), g = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, mb)
+                    return jax.tree.map(jnp.add, c, g), (l, m)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum_steps, -1, *x.shape[1:]), batch)
+                grads, (ls, ms) = jax.lax.scan(micro, zero, mbs)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss, metrics = ls.mean(), jax.tree.map(
+                    lambda m: m.mean(), ms)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model: BaseModel, mesh,
+                    shape: Optional[ShapeConfig] = None):
+    rules = logical_rules(model.cfg, mesh, shape)
+
+    def serve_step(params, cache, tokens, pos):
+        """One decode step: greedy next token for the whole batch."""
+        with logical_axis_rules(rules):
+            logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step
+
+
+def make_prefill_step(model: BaseModel, mesh,
+                      shape: Optional[ShapeConfig] = None):
+    rules = logical_rules(model.cfg, mesh, shape)
+
+    def prefill_step(params, batch):
+        with logical_axis_rules(rules):
+            logits, _ = model.forward(params, batch)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return prefill_step

@@ -1,0 +1,248 @@
+"""GQA attention: full/SWA masks, chunked online-softmax, KV cache decode.
+
+Memory strategy (maps DCRA's scratchpad/cache split onto TPU):
+* short sequences (<= DIRECT_KV_LIMIT) use direct masked softmax — the
+  "scratchpad" regime where the whole working set is resident;
+* long sequences stream KV in chunks with an online softmax (flash-style) —
+  the "cache" regime where data is staged through fast memory in lines.
+* decode (Sq == 1) computes directly over the (possibly sequence-sharded)
+  cache; XLA's partitioner turns the softmax reductions into the
+  flash-decoding partial-max/sum combine across shards.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import apply_mrope, apply_rope, dense_init, shard
+
+DIRECT_KV_LIMIT = 4096
+KV_CHUNK = 1024
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, C, Hkv, hd]
+    v: jax.Array        # [B, C, Hkv, hd]
+    length: jax.Array   # [] int32 — tokens currently valid (ring for SWA)
+
+
+def init_attention(key, cfg: ArchConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (cfg.num_heads, hd)),
+        "wk": dense_init(ks[1], d, (cfg.num_kv_heads, hd)),
+        "wv": dense_init(ks[2], d, (cfg.num_kv_heads, hd)),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, (d,)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd))
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd))
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd))
+    return p
+
+
+def _qkv(params, x, cfg: ArchConfig, kv_source=None):
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(src.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(src.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def project_cross_kv(params, enc_out, cfg: ArchConfig):
+    """Precompute cross-attention K/V from encoder output (serving prefill)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return k, v
+
+
+def _apply_pos(q, k, cfg: ArchConfig, positions):
+    """positions: [B, S] (standard) or [B, 3, S] (M-RoPE)."""
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """[..., Sq, Skv] boolean validity mask from position vectors."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        m &= kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= kv_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def _direct_attend(q, k, v, q_pos, kv_pos, causal, window):
+    """q [B,Sq,Hq,hd]; k,v [B,Skv,Hkv,hd] -> [B,Sq,Hq,hd]."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshgk,bthk->bhgst", qg, k) * scale   # [B,Hkv,G,Sq,Skv]
+    mask = _mask(q_pos, kv_pos, causal, window)                # [B?,Sq,Skv]
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthk->bshgk", w, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def _chunked_attend(q, k, v, q_pos, kv_pos, causal, window, chunk=KV_CHUNK):
+    """Online-softmax over KV chunks; exact; O(Sq * chunk) live memory."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, chunk)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        logits = jnp.einsum("bshgk,bthk->bhgst", qg, kb).astype(jnp.float32) * scale
+        msk = _mask(q_pos, pb, causal, window)
+        msk &= (pb != jnp.iinfo(jnp.int32).max)[..., None, :]  # pad sentinel
+        if msk.ndim == 2:
+            msk = msk[None]
+        logits = jnp.where(msk[:, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthk->bhgsk", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, q_pos, kv_pos, *, causal: bool, window: int = 0):
+    if k.shape[1] <= DIRECT_KV_LIMIT or q.shape[1] == 1:
+        return _direct_attend(q, k, v, q_pos, kv_pos, causal, window)
+    return _chunked_attend(q, k, v, q_pos, kv_pos, causal, window)
+
+
+def attention_block(params, x, cfg: ArchConfig, positions, *,
+                    causal: bool = True,
+                    cache: Optional[KVCache] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    kv_precomputed: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """One attention layer.
+
+    * training/prefill: ``cache is None`` -> self-attention over ``x``.
+    * decode: ``cache`` given, ``x`` is [B, 1, D]; writes K/V at ``cache_pos``
+      (ring position for SWA) and attends over the cache.
+    * cross-attention: ``kv_source`` (encoder output, train) or
+      ``kv_precomputed`` (projected K/V, decode) — no rope, no causal mask.
+    """
+    window = cfg.sliding_window
+    if kv_precomputed is not None:
+        q, _, _ = _qkv(params, x, cfg, kv_source=x)
+        k, v = kv_precomputed
+        kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        qp = positions if positions.ndim == 2 else positions[:, 0]
+        return _finish(params, attend(q, k, v, qp, kv_pos, causal=False,
+                                      window=0), x), None
+    q, k, v = _qkv(params, x, cfg, kv_source=kv_source)
+    new_cache = None
+    if kv_source is not None:
+        # cross-attention (train/prefill): no rope, no causal mask
+        kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        qp = positions if positions.ndim == 2 else positions[:, 0]
+        out = attend(q, k, v, qp, kv_pos, causal=False, window=0)
+    elif cache is None:
+        q, k = _apply_pos(q, k, cfg, positions)
+        k = shard(k, "act_batch", "act_seq_inner", "act_kv", None)
+        v = shard(v, "act_batch", "act_seq_inner", "act_kv", None)
+        qp = positions if not cfg.mrope else positions[:, 0]
+        out = attend(q, k, v, qp, qp[0] if qp.ndim == 2 else qp,
+                     causal=causal, window=window)
+    else:
+        # decode: x [B,1,D]; positions [B,1] (or [B,3,1] mrope) absolute
+        q, k = _apply_pos(q, k, cfg, positions)
+        C = cache.k.shape[1]
+        slot = (cache_pos % C).astype(jnp.int32)
+        k_cache = _scatter_slot(cache.k, k, slot)
+        v_cache = _scatter_slot(cache.v, v, slot)
+        # absolute positions of cache slots (ring-aware)
+        qp = positions if not cfg.mrope else positions[:, 0]
+        abs_pos = _cache_positions(cache_pos, C)
+        out = attend(q, k_cache, v_cache, qp, abs_pos, causal=True, window=window)
+        new_cache = KVCache(k_cache, v_cache, cache.length + 1)
+    return _finish(params, out, x), new_cache
+
+
+def _finish(params, out, x):
+    B, S = out.shape[:2]
+    out = out.reshape(B, S, -1)
+    out = jnp.einsum("bsf,fd->bsd", out, params["wo"].astype(x.dtype))
+    return shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def _scatter_slot(cache_arr, kv, slot):
+    """Write kv [B,1,H,hd] into cache [B,C,H,hd] at ring index ``slot``."""
+    C = cache_arr.shape[1]
+    onehot = jax.nn.one_hot(slot, C, dtype=kv.dtype)            # [C]
+    upd = onehot[None, :, None, None] * kv.astype(cache_arr.dtype)
+    keep = (1 - onehot)[None, :, None, None].astype(cache_arr.dtype)
+    return cache_arr * keep + upd.astype(cache_arr.dtype)
+
+
+def _cache_positions(cache_pos, C):
+    """Absolute position of each ring slot given next-write pos ``cache_pos``.
+
+    Slots hold the last C tokens: slot i holds absolute position
+    p where p ≡ i (mod C) and p in [cache_pos - C, cache_pos - 1] —
+    plus the just-written token at slot cache_pos % C (position cache_pos).
+    """
+    idx = jnp.arange(C, dtype=jnp.int32)
+    wrap = (cache_pos % C).astype(jnp.int32)
+    base = (cache_pos // C).astype(jnp.int32)
+    pos = jnp.where(idx <= wrap, base * C + idx, (base - 1) * C + idx)
+    # never-written slots (first lap) -> sentinel masked by the causal check
+    return jnp.where(pos < 0, jnp.iinfo(jnp.int32).max, pos)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    """Cache for one layer. SWA bounds capacity by the window (ring)."""
+    C = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    hd = cfg.resolved_head_dim
+    shape = (batch, C, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))

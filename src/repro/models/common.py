@@ -1,0 +1,150 @@
+"""Shared model utilities: norms, RoPE/M-RoPE, inits, logical sharding.
+
+Logical-axis sharding (MaxText-style): model code annotates tensors with
+*logical* axis names; a rules table (set by the launcher per mesh/"packaging")
+maps logical names -> mesh axes. This is DCRA's reconfigurability knob: the
+same model definition is "re-packaged" onto different meshes by swapping the
+rules, never by editing model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical sharding rules
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Union[str, Tuple[str, ...], None]]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Dict[str, Union[str, Tuple[str, ...], None]]):
+    """Install logical->mesh axis rules for the enclosed trace."""
+    prev = _rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    rules = _rules() or {}
+    return P(*(rules.get(n) if n is not None else None for n in names))
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the mesh axes the active rules map ``names`` to."""
+    rules = _rules()
+    if rules is None:
+        return x
+    spec = logical_spec(*names)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Stable CE over the (possibly sharded) vocab axis. logits [..., V]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    angles = angles[..., None, :]                      # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Sequence[int] = (16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, hd]; positions: [B, 3, S] (temporal, height, width streams).
+    ``sections`` partitions the hd/2 rotary frequencies among the 3 streams.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    secs = list(sections)
+    if sum(secs) != half:  # rescale sections for reduced head dims
+        base = [max(1, s * half // sum(secs)) for s in secs]
+        base[0] += half - sum(base)
+        secs = base
+    freqs = rope_freqs(hd, theta)                      # [half]
+    # angles per stream then select per-frequency stream by section
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, 3, S, half]
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(secs), total_repeat_length=half)
+    angles = jnp.take_along_axis(
+        ang, sec_id[None, None, None, :].repeat(ang.shape[2], axis=2), axis=1
+    )[:, 0]                                            # [B, S, half]
+    angles = angles[..., None, :]                      # [B, S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_shape, scale: float = 1.0,
+               dtype=jnp.float32) -> jax.Array:
+    shape = (in_dim,) + tuple(out_shape)
+    std = scale / (in_dim ** 0.5)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02

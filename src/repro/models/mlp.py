@@ -1,0 +1,26 @@
+"""Dense SwiGLU FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard, swiglu
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, d_model, (d_ff,)),
+        "wu": dense_init(k2, d_model, (d_ff,)),
+        "wd": dense_init(k3, d_ff, (d_model,)),
+    }
+
+
+def mlp_block(params, x):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(dt))
+    h = swiglu(g, u)
+    h = shard(h, "act_batch", "act_seq_inner", "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wd"].astype(dt))
+    return shard(out, "act_batch", "act_seq", "act_embed")

@@ -1,0 +1,369 @@
+"""Unified Model interface over all assigned architecture families.
+
+Contracts
+---------
+``batch`` (train/prefill):
+  * decoder LMs : {"tokens": [B,S] i32, "labels": [B,S] i32}
+  * vlm         : + {"patch_embeds": [B,P,D] (stub frontend), "positions": [B,3,S]}
+  * encdec      : {"src_embeds": [B,Ssrc,D] (stub frontend), "tokens": [B,Stgt],
+                   "labels": [B,Stgt]}
+``decode_step(params, cache, tokens [B,1], pos [])`` -> (logits [B,1,V], cache)
+  ``pos`` is the absolute position of the new token (cache holds positions
+  < pos). Cache pytrees are stacked over layers for scan compatibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import init_kv_cache, project_cross_kv
+from .common import rms_norm, shard, softmax_cross_entropy
+from .mamba2 import init_mamba_block, init_mamba_state, mamba_block
+from .rwkv6 import init_rwkv_block, init_rwkv_state, rwkv_block
+from .transformer import (decoder_block, embed_tokens, init_decoder_block,
+                          init_embed, lm_logits, run_stack, run_stack_decode,
+                          tree_slice, tree_stack, _remat)
+
+VLM_PATCHES = 256  # stub vision frontend: 16x16 patch grid
+
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _positions(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32) + offset, (B, S))
+
+
+class BaseModel:
+    family: str
+
+    def __init__(self, cfg: ArchConfig, mesh_info=None, dtype=jnp.float32):
+        self.cfg = cfg
+        self.mesh_info = mesh_info
+        self.dtype = dtype
+
+    # -- interface ------------------------------------------------------
+    def init(self, key):
+        raise NotImplementedError
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def init_cache(self, batch_size: int, cache_len: int, dtype=jnp.bfloat16):
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, tokens, pos):
+        raise NotImplementedError
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:]).mean()
+        total = ce + 0.01 * aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only (dense / MoE / VLM)
+# ---------------------------------------------------------------------------
+
+class DecoderLM(BaseModel):
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            **init_embed(k1, self.cfg),
+            "blocks": _stack_init(
+                lambda k: init_decoder_block(k, self.cfg), k2,
+                self.cfg.num_layers),
+        }
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tok_e = embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(self.dtype), tok_e], axis=1)
+            positions = batch["positions"]            # [B,3,S]
+        else:
+            x = tok_e
+            B, S = batch["tokens"].shape
+            positions = _positions(B, S)
+        return x, positions
+
+    def forward(self, params, batch):
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = run_stack(params["blocks"], x, self.cfg, positions,
+                           mesh_info=self.mesh_info)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), self.cfg.norm_eps)
+        if self.cfg.family == "vlm" and "patch_embeds" in batch:
+            x = x[:, batch["patch_embeds"].shape[1]:]   # logits over text tail
+        return lm_logits(params, x, self.cfg), aux
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        one = lambda _: init_kv_cache(self.cfg, batch_size, cache_len, dtype)
+        return jax.vmap(one)(jnp.arange(self.cfg.num_layers))
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_tokens(params, tokens, cfg, self.dtype)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 3, 1))
+        else:
+            positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+        x, new_cache = run_stack_decode(params["blocks"], x, cfg, positions,
+                                        cache, pos, mesh_info=self.mesh_info)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        return lm_logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+class RWKVLM(BaseModel):
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            **init_embed(k1, self.cfg),
+            "blocks": _stack_init(
+                lambda k: init_rwkv_block(k, self.cfg), k2,
+                self.cfg.num_layers),
+        }
+
+    def _run(self, params, x, states, impl):
+        cfg = self.cfg
+
+        def body(xc, layer):
+            layer_params, layer_state = layer
+            out, new_state = rwkv_block(layer_params, xc, cfg, layer_state,
+                                        impl=impl)
+            return out, new_state
+
+        if cfg.scan_layers:
+            body_r = _remat(body, cfg)
+            x, new_states = jax.lax.scan(body_r, x, (params["blocks"], states))
+        else:
+            body_r = _remat(body, cfg)
+            outs = []
+            for i in range(cfg.num_layers):
+                x, ns = body_r(x, (tree_slice(params["blocks"], i),
+                                   tree_slice(states, i)))
+                outs.append(ns)
+            new_states = tree_stack(outs)
+        return x, new_states
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        B, S = batch["tokens"].shape
+        x = embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        states = self.init_cache(B, 0, jnp.float32)
+        impl = "chunked" if S % 32 == 0 and S > 32 else "scan"
+        x, _ = self._run(params, x, states, impl)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        return lm_logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.float32):
+        one = lambda _: init_rwkv_state(self.cfg, batch_size, jnp.float32)
+        return jax.vmap(one)(jnp.arange(self.cfg.num_layers))
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = embed_tokens(params, tokens, cfg, self.dtype)
+        x, new_states = self._run(params, x, cache, "scan")
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        return lm_logits(params, x, cfg), new_states
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid: Mamba2 stack + one weight-shared attention block
+# ---------------------------------------------------------------------------
+
+class HybridLM(BaseModel):
+    """Mamba2 layers; after every ``hybrid_attn_period`` layers the SHARED
+    attention+MLP block is applied (weight-shared across applications, each
+    application has its own KV cache)."""
+
+    def _segments(self):
+        cfg = self.cfg
+        p = cfg.hybrid_attn_period
+        full, rem = divmod(cfg.num_layers, p)
+        segs = [p] * full + ([rem] if rem else [])
+        n_attn = full  # shared block after each full segment
+        return segs, n_attn
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            **init_embed(k1, self.cfg),
+            "blocks": _stack_init(
+                lambda k: init_mamba_block(k, self.cfg), k2,
+                self.cfg.num_layers),
+            "shared_attn": init_decoder_block(k3, self.cfg),
+        }
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        B, S = batch["tokens"].shape
+        x = embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        positions = _positions(B, S)
+        segs, _ = self._segments()
+        impl = ("chunked" if S % cfg.ssm.chunk_size == 0
+                and S > cfg.ssm.chunk_size else "scan")
+        start = 0
+        for si, seg in enumerate(segs):
+            blocks = jax.tree.map(lambda p: p[start:start + seg],
+                                  params["blocks"])
+            states = jax.vmap(
+                lambda _: init_mamba_state(cfg, B, jnp.float32))(
+                    jnp.arange(seg))
+
+            def body(xc, layer):
+                lp, ls = layer
+                out, ns = mamba_block(lp, xc, cfg, ls, impl=impl)
+                return xc + out, ns
+
+            body_r = _remat(body, cfg)
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(body_r, x, (blocks, states))
+            else:
+                for li in range(seg):
+                    x, _ = body_r(x, (tree_slice(blocks, li),
+                                      tree_slice(states, li)))
+            if si < len(segs) and seg == cfg.hybrid_attn_period:
+                def attn_body(xc, ap):
+                    out, _, _ = decoder_block(ap, xc, cfg, positions,
+                                              mesh_info=self.mesh_info)
+                    return out
+                attn_r = (jax.checkpoint(attn_body) if cfg.remat != "none"
+                          else attn_body)
+                x = attn_r(x, params["shared_attn"])
+            start += seg
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        return lm_logits(params, x, cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        segs, n_attn = self._segments()
+        mamba = jax.vmap(lambda _: init_mamba_state(cfg, batch_size,
+                                                    jnp.float32))(
+            jnp.arange(cfg.num_layers))
+        kv = jax.vmap(lambda _: init_kv_cache(cfg, batch_size, cache_len,
+                                              dtype))(jnp.arange(max(n_attn, 1)))
+        return {"mamba": mamba, "kv": kv}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_tokens(params, tokens, cfg, self.dtype)
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+        segs, _ = self._segments()
+        start, attn_i = 0, 0
+        new_mamba, new_kv = [], []
+        for si, seg in enumerate(segs):
+            for li in range(start, start + seg):
+                lp = tree_slice(params["blocks"], li)
+                ls = tree_slice(cache["mamba"], li)
+                out, ns = mamba_block(lp, x, cfg, ls, impl="scan")
+                x = x + out
+                new_mamba.append(ns)
+            if seg == cfg.hybrid_attn_period:
+                kv_i = tree_slice(cache["kv"], attn_i)
+                x, nkv, _ = decoder_block(params["shared_attn"], x, cfg,
+                                          positions, cache=kv_i, cache_pos=pos,
+                                          mesh_info=self.mesh_info)
+                new_kv.append(nkv)
+                attn_i += 1
+            start += seg
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        new_cache = {"mamba": tree_stack(new_mamba),
+                     "kv": tree_stack(new_kv) if new_kv else cache["kv"]}
+        return lm_logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless backbone)
+# ---------------------------------------------------------------------------
+
+class EncDecLM(BaseModel):
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            **init_embed(k1, self.cfg),
+            "enc_blocks": _stack_init(
+                lambda k: init_decoder_block(k, self.cfg), k2,
+                self.cfg.encoder_layers),
+            "blocks": _stack_init(
+                lambda k: init_decoder_block(k, self.cfg, cross=True), k3,
+                self.cfg.num_layers),
+        }
+
+    def encode(self, params, src_embeds):
+        B, S, _ = src_embeds.shape
+        positions = _positions(B, S)
+        x, _ = run_stack(params["enc_blocks"], src_embeds.astype(self.dtype),
+                         self.cfg, positions, causal=False,
+                         mesh_info=self.mesh_info)
+        return x
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"])
+        B, S = batch["tokens"].shape
+        x = embed_tokens(params, batch["tokens"], cfg, self.dtype)
+        positions = _positions(B, S)
+        x, aux = run_stack(params["blocks"], x, cfg, positions,
+                           enc_out=enc_out, mesh_info=self.mesh_info)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        return lm_logits(params, x, cfg), aux
+
+    def precompute_cross_kv(self, params, enc_out):
+        def per_layer(layer_params):
+            return project_cross_kv(layer_params["xattn"], enc_out, self.cfg)
+        return jax.vmap(per_layer, in_axes=0)(params["blocks"])
+
+    def init_cache(self, batch_size, cache_len, dtype=jnp.bfloat16,
+                   cross_len: int = 4096):
+        cfg = self.cfg
+        kv = jax.vmap(lambda _: init_kv_cache(cfg, batch_size, cache_len,
+                                              dtype))(jnp.arange(cfg.num_layers))
+        hd = cfg.resolved_head_dim
+        xk = jnp.zeros((cfg.num_layers, batch_size, cross_len,
+                        cfg.num_kv_heads, hd), dtype)
+        return {"kv": kv, "cross_k": xk, "cross_v": xk}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_tokens(params, tokens, cfg, self.dtype)
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+        x, new_kv = run_stack_decode(
+            params["blocks"], x, cfg, positions, cache["kv"], pos,
+            enc_kv=(cache["cross_k"], cache["cross_v"]),
+            mesh_info=self.mesh_info)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps)
+        new_cache = {"kv": new_kv, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+        return lm_logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+
+_FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "ssm": RWKVLM,
+    "hybrid": HybridLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: ArchConfig, mesh_info=None, dtype=jnp.float32) -> BaseModel:
+    return _FAMILIES[cfg.family](cfg, mesh_info=mesh_info, dtype=dtype)

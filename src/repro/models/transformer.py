@@ -1,0 +1,177 @@
+"""Decoder-only transformer (dense / MoE / VLM), enc-dec, and hybrid stacks.
+
+All families share one storage convention: ``params["blocks"]`` is a
+*stacked* pytree (leading axis = layer). ``scan_layers=True`` runs layers
+under ``jax.lax.scan`` (small HLO, FSDP-friendly); ``False`` unrolls a python
+loop over sliced subtrees — identical checkpoints either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (KVCache, attention_block, init_attention,
+                        init_kv_cache)
+from .common import embed_init, rms_norm, shard
+from .mamba2 import MambaState, init_mamba_block, init_mamba_state, mamba_block
+from .mlp import init_mlp, mlp_block
+from .moe import init_moe, moe_block
+from .rwkv6 import RWKVState, init_rwkv_block, init_rwkv_state, rwkv_block
+
+
+def tree_slice(tree, i):
+    return jax.tree.map(lambda p: p[i], tree)
+
+
+def tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Attention-family decoder block
+# ---------------------------------------------------------------------------
+
+def init_decoder_block(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "attn": init_attention(ks[0], cfg),
+    }
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,))
+        p["xattn"] = init_attention(ks[1], cfg)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def decoder_block(params, x, cfg: ArchConfig, positions, *,
+                  causal: bool = True,
+                  cache: Optional[KVCache] = None,
+                  cache_pos=None,
+                  enc_out: Optional[jax.Array] = None,
+                  enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  mesh_info=None):
+    """-> (x, new_cache, aux_loss)."""
+    h = rms_norm(x, params["ln1"].astype(x.dtype), cfg.norm_eps)
+    attn_out, new_cache = attention_block(
+        params["attn"], h, cfg, positions, causal=causal,
+        cache=cache, cache_pos=cache_pos)
+    x = x + attn_out
+    if enc_out is not None or enc_kv is not None:
+        h = rms_norm(x, params["ln_x"].astype(x.dtype), cfg.norm_eps)
+        xo, _ = attention_block(params["xattn"], h, cfg, positions,
+                                causal=False, kv_source=enc_out,
+                                kv_precomputed=enc_kv)
+        x = x + xo
+    h = rms_norm(x, params["ln2"].astype(x.dtype), cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        out, aux = moe_block(params["moe"], h, cfg, mesh_info)
+    else:
+        out = mlp_block(params["mlp"], h)
+    x = x + out
+    return shard(x, "act_batch", "act_seq", "act_embed"), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD = 128  # pad vocab so embedding/logits shard over any mesh axis
+
+
+def padded_vocab(vocab_size: int) -> int:
+    return -(-vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+def init_embed(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    vp = padded_vocab(cfg.vocab_size)
+    p = {"embed": embed_init(k1, vp, cfg.d_model),
+         "ln_f": jnp.ones((cfg.d_model,))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(k2, vp, cfg.d_model)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig, dtype=jnp.float32):
+    e = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return shard(e, "act_batch", "act_seq", "act_embed")
+
+
+def lm_logits(params, x, cfg: ArchConfig):
+    # gather seq, shard vocab: the CE reductions then stay vocab-local and
+    # only [B,S]-sized partials cross the network (vs gathering [B,S,V]).
+    head = params.get("lm_head", params["embed"])
+    x = shard(x, "act_batch", "act_seq_inner", "act_embed")
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+    return shard(logits, "act_batch", "act_seq_inner", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack runners
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":   # save matmul outputs (hillclimb knob)
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "block"/"full": recompute block internals
+
+
+def run_stack(blocks, x, cfg: ArchConfig, positions, *, causal=True,
+              enc_out=None, mesh_info=None):
+    """Run all layers (train/prefill). blocks = stacked pytree."""
+    def body(xc, layer_params):
+        out, _, aux = decoder_block(layer_params, xc, cfg, positions,
+                                    causal=causal, enc_out=enc_out,
+                                    mesh_info=mesh_info)
+        return out, aux
+
+    if cfg.scan_layers:
+        body_r = _remat(body, cfg)
+        x, auxs = jax.lax.scan(body_r, x, blocks)
+        return x, auxs.sum()
+    body_r = _remat(body, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    n = jax.tree.leaves(blocks)[0].shape[0] if blocks is not None else 0
+    for i in range(n):
+        x, aux = body_r(x, tree_slice(blocks, i))
+        aux_total += aux
+    return x, aux_total
+
+
+def run_stack_decode(blocks, x, cfg: ArchConfig, positions, caches,
+                     cache_pos, *, enc_kv=None, mesh_info=None):
+    """One decode step through all layers.
+
+    ``caches`` stacked [L, ...]; ``enc_kv`` (optional) stacked per-layer
+    precomputed cross K/V.
+    """
+    def body(xc, layer):
+        layer_params, layer_cache, layer_enc = layer
+        out, new_cache, _ = decoder_block(
+            layer_params, xc, cfg, positions, cache=layer_cache,
+            cache_pos=cache_pos, enc_kv=layer_enc, mesh_info=mesh_info)
+        return out, new_cache
+
+    n_layers = cfg.num_layers
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(
+            lambda xc, layer: body(xc, layer), x, (blocks, caches, enc_kv))
+        return x, new_caches
+    new_list = []
+    for i in range(n_layers):
+        enc_i = tree_slice(enc_kv, i) if enc_kv is not None else None
+        x, nc = body(x, (tree_slice(blocks, i), tree_slice(caches, i), enc_i))
+        new_list.append(nc)
+    return x, tree_stack(new_list)

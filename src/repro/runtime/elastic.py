@@ -1,0 +1,26 @@
+"""Elastic rescaling: move training state between meshes ("repackaging").
+
+Because checkpoints are mesh-agnostic (host numpy + target shardings), a
+rescale is: save on mesh A -> build mesh B + its shardings -> restore. This
+module provides the one-call wrapper plus a pure in-memory reshard for
+tests (no filesystem round-trip).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from ..checkpoint import checkpoint as ckpt
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """In-memory mesh-to-mesh move (host round-trip, correct for any pair)."""
+    def one(x, sh):
+        return jax.device_put(jax.device_get(x), sh)
+    return jax.tree.map(one, tree, shardings)
+
+
+def rescale_from_checkpoint(ckpt_dir: str, step: int, target_state: Any,
+                            target_shardings: Optional[Any]) -> Any:
+    return ckpt.restore(ckpt_dir, step, target_state, target_shardings)

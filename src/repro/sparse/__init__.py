@@ -1,0 +1,1 @@
+from . import apps, csr, datasets, ref                    # noqa: F401

@@ -1,0 +1,99 @@
+"""Graph/sparse datasets: RMAT (Graph500) + a Wikipedia-like power-law graph.
+
+The paper evaluates RMAT-22/25/26 and the Wikipedia graph. Full-scale RMATs
+don't fit a CI box; dataset *names* are preserved with a ``scale`` override
+so tests use RMAT-10..14 while the cost model can be queried at paper scale
+(footprints are analytic). Generators are deterministic (seeded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .csr import CSR, from_edges
+
+# Graph500 RMAT parameters
+A, B, C = 0.57, 0.19, 0.19
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
+         undirected: bool = True) -> CSR:
+    """RMAT-<scale>: 2**scale vertices, edge_factor * V edges (pre-dedup)."""
+    rng = np.random.default_rng(seed)
+    V = 1 << scale
+    E = V * edge_factor
+    src = np.zeros(E, np.int64)
+    dst = np.zeros(E, np.int64)
+    for bit in range(scale):
+        u = rng.random(E)
+        row = (u >= A + B)                        # BL or BR quadrant
+        col = ((u >= A) & (u < A + B)) | (u >= A + B + C)   # TR or BR
+        src = (src << 1) | row
+        dst = (dst << 1) | col
+    # permute vertex ids to break the RMAT ordering artefact (Graph500)
+    perm = rng.permutation(V)
+    src, dst = perm[src], perm[dst]
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    # dedupe
+    key = src * V + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    w = (rng.integers(1, 256, len(src))).astype(np.float32)
+    return from_edges(V, src, dst, w)
+
+
+def wiki_like(n_vertices: int = 4096, avg_degree: int = 25,
+              seed: int = 7) -> CSR:
+    """Wikipedia-like: heavier-tailed in/out degree (Zipf), directed."""
+    rng = np.random.default_rng(seed)
+    E = n_vertices * avg_degree
+    # zipf-distributed popularity for destinations, lighter tail for sources
+    ranks = np.arange(1, n_vertices + 1)
+    p_dst = 1.0 / ranks ** 0.9
+    p_dst /= p_dst.sum()
+    p_src = 1.0 / ranks ** 0.6
+    p_src /= p_src.sum()
+    src = rng.choice(n_vertices, E, p=p_src)
+    dst = rng.choice(n_vertices, E, p=p_dst)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src.astype(np.int64) * n_vertices + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    w = rng.integers(1, 256, len(src)).astype(np.float32)
+    return from_edges(n_vertices, src.astype(np.int64), dst.astype(np.int64), w)
+
+
+@dataclass(frozen=True)
+class DatasetInfo:
+    """Analytic footprint of the paper's full-scale datasets (§IV-A)."""
+    name: str
+    vertices: int
+    edges: int
+
+    @property
+    def footprint_bytes(self) -> float:
+        # CSR: row_ptr (8B/V) + col_idx (4B/E) + values (4B/E) + output (4B/V)
+        return 12.0 * self.vertices + 8.0 * self.edges
+
+
+PAPER_DATASETS = {
+    "R22": DatasetInfo("RMAT-22", 1 << 22, int(1 << 22) * 32),
+    "R25": DatasetInfo("RMAT-25", 1 << 25, int(1 << 25) * 32),
+    "R26": DatasetInfo("RMAT-26", 1 << 26, int(1.3e9)),
+    "WK": DatasetInfo("Wikipedia", 4_200_000, 101_000_000),
+}
+
+
+def histogram_data(n: int = 1 << 16, n_bins: int = 1 << 12,
+                   seed: int = 3) -> np.ndarray:
+    """Element stream for the Histogram app (parboil-style: image-like
+    values concentrated around the middle bins with mild hotspotting)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(n_bins / 2, n_bins / 6, n)
+    return np.clip(vals, 0, n_bins - 1).astype(np.int64)

@@ -1,0 +1,83 @@
+"""Pure-numpy oracles for the six paper applications (§IV-A).
+
+Independent implementations (no task engine, no tile grid) used to verify
+the DCRA execution paths bit-for-bit / to float tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSR
+
+INF = np.float64(np.inf)
+
+
+def bfs_ref(g: CSR, root: int) -> np.ndarray:
+    """Hop count from root; -1 if unreachable."""
+    dist = np.full(g.n, -1, np.int64)
+    dist[root] = 0
+    frontier = np.array([root])
+    level = 0
+    while len(frontier):
+        level += 1
+        starts, ends = g.row_ptr[frontier], g.row_ptr[frontier + 1]
+        nbrs = np.concatenate([g.col_idx[s:e] for s, e in zip(starts, ends)]) \
+            if len(frontier) else np.array([], np.int32)
+        nbrs = np.unique(nbrs)
+        new = nbrs[dist[nbrs] < 0]
+        dist[new] = level
+        frontier = new
+    return dist
+
+
+def sssp_ref(g: CSR, root: int) -> np.ndarray:
+    """Bellman-Ford shortest path weights; inf if unreachable."""
+    dist = np.full(g.n, np.inf)
+    dist[root] = 0.0
+    rows = g.row_of()
+    for _ in range(g.n):
+        cand = dist[rows] + g.values
+        upd = np.full(g.n, np.inf)
+        np.minimum.at(upd, g.col_idx, cand)
+        nd = np.minimum(dist, upd)
+        if np.allclose(nd, dist, equal_nan=True):
+            break
+        dist = nd
+    return dist
+
+
+def pagerank_ref(g: CSR, damping: float = 0.85, iters: int = 20) -> np.ndarray:
+    deg = g.degrees().astype(np.float64)
+    rank = np.full(g.n, 1.0 / g.n)
+    rows = g.row_of()
+    for _ in range(iters):
+        contrib = np.where(deg > 0, rank / np.maximum(deg, 1), 0.0)
+        acc = np.bincount(g.col_idx, weights=contrib[rows], minlength=g.n)
+        # dangling mass redistributed uniformly
+        dangling = rank[deg == 0].sum()
+        rank = (1 - damping) / g.n + damping * (acc + dangling / g.n)
+    return rank
+
+
+def wcc_ref(g: CSR) -> np.ndarray:
+    """Label propagation (min label) — graph coloring per the paper [78]."""
+    label = np.arange(g.n, dtype=np.int64)
+    rows = g.row_of()
+    changed = True
+    while changed:
+        upd = label.copy()
+        np.minimum.at(upd, g.col_idx, label[rows])
+        np.minimum.at(upd, rows, label[g.col_idx])
+        changed = not np.array_equal(upd, label)
+        label = upd
+    return label
+
+
+def spmv_ref(g: CSR, x: np.ndarray) -> np.ndarray:
+    rows = g.row_of()
+    return np.bincount(rows, weights=g.values * x[g.col_idx],
+                       minlength=g.n).astype(np.float64)
+
+
+def histogram_ref(elements: np.ndarray, n_bins: int) -> np.ndarray:
+    return np.bincount(elements, minlength=n_bins).astype(np.int64)

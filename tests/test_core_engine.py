@@ -1,0 +1,140 @@
+"""Task engine / topology / queue / cache model unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, TaskEngine, TileGrid
+from repro.core.cache import CacheModel, DRAMConfig, SRAMConfig
+from repro.costmodel import murphy_yield, die_cost_usd, dcra_die_area_mm2
+from repro.costmodel.silicon import package_cost
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+def test_torus_halves_worst_case_hops():
+    g_mesh = TileGrid(8, 8, "mesh")
+    g_torus = TileGrid(8, 8, "torus")
+    src = np.array([0])
+    dst = np.array([63])   # opposite corner
+    assert g_mesh.hops(src, dst)[0] == 14
+    assert g_torus.hops(src, dst)[0] == 2   # wraps both axes
+
+
+def test_torus_bisection_doubles_mesh():
+    m = TileGrid(16, 16, "mesh")
+    t = TileGrid(16, 16, "torus")
+    assert t.bisection_links() == 2 * m.bisection_links()
+
+
+def test_hier_reduces_long_distance_hops():
+    flat = TileGrid(64, 64, "torus", die_rows=16, die_cols=16)
+    hier = TileGrid(64, 64, "hier_torus", die_rows=16, die_cols=16)
+    assert hier.avg_uniform_hops() < flat.avg_uniform_hops()
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.sampled_from([4, 8, 16]), c=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 1000))
+def test_hops_symmetric_and_bounded(r, c, seed):
+    g = TileGrid(r, c, "torus", die_rows=max(r // 2, 1),
+                 die_cols=max(c // 2, 1))
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, g.n_tiles, 32)
+    d = rng.integers(0, g.n_tiles, 32)
+    h1, h2 = g.hops(s, d), g.hops(d, s)
+    assert np.array_equal(h1, h2)                  # symmetric
+    assert (h1 <= r // 2 + c // 2).all()           # torus diameter
+    assert (g.hops(s, s) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# engine routing + reductions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), op=st.sampled_from(["add", "min"]))
+def test_route_reduction_matches_numpy(seed, op):
+    rng = np.random.default_rng(seed)
+    n = 256
+    eng = TaskEngine(EngineConfig(grid=TileGrid(4, 4, die_rows=2,
+                                                die_cols=2)), n)
+    src = rng.integers(0, n, 500)
+    dst = rng.integers(0, n, 500)
+    vals = rng.random(500)
+    if op == "add":
+        target = np.zeros(n)
+        want = np.bincount(dst, weights=vals, minlength=n)
+    else:
+        target = np.full(n, np.inf)
+        want = np.full(n, np.inf)
+        np.minimum.at(want, dst, vals)
+    eng.route("T", src, dst, vals, target, op)
+    assert np.allclose(target, want)
+    rs = eng.stats.rounds[-1]
+    assert rs.messages + rs.local_msgs == 500
+    assert rs.hops >= rs.messages            # >= 1 hop per remote message
+
+
+def test_queue_stats_recorded():
+    eng = TaskEngine(EngineConfig(grid=TileGrid(4, 4)), 64)
+    dst = np.zeros(100, np.int64)            # all to tile 0 -> hotspot
+    eng.route("T3", np.arange(100) % 64, dst, np.ones(100),
+              np.zeros(64), "add")
+    assert eng.stats.queue.peak_iq["T3"] == 100
+    assert eng.stats.rounds[-1].tasks_per_tile_peak == 100
+
+
+# ---------------------------------------------------------------------------
+# cache model
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_rate_monotone_in_sram():
+    dram = DRAMConfig(present=True)
+    foot = 4 * 2**20                           # 4MB/tile footprint
+    hits = [CacheModel(SRAMConfig(kb_per_tile=kb), dram)
+            .random_hit_rate(foot) for kb in (64, 128, 256, 512)]
+    assert all(a < b for a, b in zip(hits, hits[1:]))
+
+
+def test_effective_bw_formula():
+    cm = CacheModel(SRAMConfig(kb_per_tile=512), DRAMConfig(present=True))
+    full = cm.effective_bw(1.0)
+    none = cm.effective_bw(0.0)
+    assert full == pytest.approx(cm.sram_bw_bytes_per_ns())
+    assert none == pytest.approx(cm.dram_bw_per_tile_bytes_per_ns())
+
+
+def test_scratchpad_mode_always_hits():
+    cm = CacheModel(SRAMConfig(kb_per_tile=512), DRAMConfig(present=False))
+    assert cm.random_hit_rate(10 * 2**30) == 1.0   # dataset fits by layout
+
+
+# ---------------------------------------------------------------------------
+# silicon cost model
+# ---------------------------------------------------------------------------
+
+def test_murphy_yield_decreases_with_area():
+    ys = [murphy_yield(a, 0.0007) for a in (50, 100, 200, 400)]
+    assert all(a > b for a, b in zip(ys, ys[1:]))
+    assert 0 < ys[-1] < ys[0] <= 1
+
+
+def test_die_cost_scales_superlinearly():
+    c100 = die_cost_usd(100)
+    c400 = die_cost_usd(400)
+    assert c400 > 4 * c100     # yield loss makes big dies extra expensive
+
+
+def test_paper_die_area_sane():
+    # paper §V-B: 32x32-tile die with 512KB/tile ~ 255mm^2 "still good yield"
+    area = dcra_die_area_mm2(1024, 512)
+    assert 150 < area < 350
+    assert murphy_yield(area, 0.0007) > 0.5
+
+
+def test_package_cost_components():
+    pc = package_cost(4, 200.0, hbm_gb_total=32.0)
+    assert pc.hbm_usd == pytest.approx(32 * 7.5)
+    assert pc.total > pc.dcra_dies_usd + pc.hbm_usd

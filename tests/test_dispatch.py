@@ -1,0 +1,88 @@
+"""DCRA MoE dispatch vs the einsum oracle on a multi-device (fake) mesh.
+
+Runs in a subprocess so XLA_FLAGS device-count doesn't leak into other
+tests (smoke tests must see 1 device, per the dry-run spec).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json, dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core.dispatch import MeshInfo, moe_dcra
+from repro.models.moe import init_moe, moe_einsum
+
+cfg = get_config('olmoe-1b-7b').reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                       capacity_factor=8.0))
+params = init_moe(jax.random.key(0), cfg)
+x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model))
+out_e, aux_e = moe_einsum(params, x, cfg)
+cfg8 = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                        num_experts=8,
+                                                        capacity_factor=8.0))
+params8 = init_moe(jax.random.key(2), cfg8)
+out_e8, _ = moe_einsum(params8, x, cfg8)
+
+res = {}
+mesh = jax.make_mesh((2, 2, 2), ('data', 'expert', 'tp'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+info = MeshInfo(mesh, pod_axis=None)
+with jax.set_mesh(mesh):
+    out_d, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg, info))(params, x)
+res['single_pod_fused'] = float(jnp.max(jnp.abs(out_d - out_e)))
+
+info_tp = MeshInfo(mesh, pod_axis=None, fuse_tp=False)
+with jax.set_mesh(mesh):
+    out_t, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg, info_tp))(params, x)
+res['tp_ffn'] = float(jnp.max(jnp.abs(out_t - out_e)))
+
+mesh2 = jax.make_mesh((2, 1, 2, 2), ('pod', 'data', 'expert', 'tp'),
+                      axis_types=(jax.sharding.AxisType.Auto,)*4)
+info2 = MeshInfo(mesh2, pod_axis='pod')
+assert info2.dispatch_plan(8)[1] is True   # spans pods (hierarchical)
+with jax.set_mesh(mesh2):
+    out_h, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg8, info2))(params8, x)
+res['hierarchical'] = float(jnp.max(jnp.abs(out_h - out_e8)))
+
+with jax.set_mesh(mesh2):
+    g = jax.jit(jax.grad(lambda p, x: moe_dcra(p, x, cfg8, info2)[0].sum()))(
+        params8, x)
+res['grads_finite'] = all(bool(jnp.isfinite(v).all())
+                          for v in jax.tree.leaves(g))
+print('RESULT ' + json.dumps(res))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_single_pod_fused_matches_einsum(results):
+    assert results["single_pod_fused"] < 1e-4
+
+
+def test_tp_ffn_path_matches_einsum(results):
+    assert results["tp_ffn"] < 1e-4
+
+
+def test_hierarchical_two_stage_matches_einsum(results):
+    assert results["hierarchical"] < 1e-4
+
+
+def test_gradients_flow(results):
+    assert results["grads_finite"]

@@ -1,0 +1,127 @@
+"""Per-kernel Pallas (interpret mode) vs ref.py oracles: shape/dtype sweeps
+plus hypothesis property tests on invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.moe_gmm import gmm_pallas
+from repro.kernels.spmv import bsr_spmv_pallas, csr_to_bsr, spmv_csr
+from repro.sparse import datasets
+from repro.sparse import ref as sref
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bins", [(1024, 256), (4096, 512), (2048, 64),
+                                    (8192, 1024)])
+def test_histogram_shapes(n, bins):
+    els = jax.random.randint(jax.random.key(n), (n,), 0, bins)
+    got = histogram_pallas(els, bins)
+    want = ref.histogram_ref(els, bins)
+    assert (got == want).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), logbins=st.integers(3, 8))
+def test_histogram_property(seed, logbins):
+    bins = 1 << logbins
+    els = jax.random.randint(jax.random.key(seed), (1024,), 0, bins)
+    got = histogram_pallas(els, bins)
+    assert int(got.sum()) == 1024           # conservation
+    assert (got >= 0).all()
+    assert (got == ref.histogram_ref(els, bins)).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,hd,tq,tk,dtype", [
+    (128, 64, 64, 64, jnp.float32),
+    (256, 64, 128, 64, jnp.float32),
+    (256, 128, 64, 128, jnp.float32),
+    (128, 64, 64, 64, jnp.bfloat16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(S, hd, tq, tk, dtype, causal):
+    B, H = 2, 2
+    ks = jax.random.split(jax.random.key(0), 3)
+    q, k, v = (jax.random.normal(kk, (B * H, S, hd)).astype(dtype)
+               for kk in ks)
+    got = flash_attention_pallas(q, k, v, causal=causal, tq=tq, tk=tk)
+    want = ref.flash_attention_ref(
+        q.reshape(B, H, S, hd), k.reshape(B, H, S, hd),
+        v.reshape(B, H, S, hd), causal=causal).reshape(B * H, S, hd)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert jnp.max(jnp.abs(got.astype(jnp.float32)
+                           - want.astype(jnp.float32))) < tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_rows_sum_property(seed):
+    """Attention output of constant-V inputs equals that constant."""
+    S, hd = 128, 64
+    q = jax.random.normal(jax.random.key(seed), (1, S, hd))
+    k = jax.random.normal(jax.random.key(seed + 1), (1, S, hd))
+    v = jnp.ones((1, S, hd))
+    out = flash_attention_pallas(q, k, v, causal=True, tq=64, tk=64)
+    assert jnp.allclose(out, 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,F,E,rt", [
+    (256, 64, 128, 2, 128), (512, 32, 256, 4, 128), (384, 128, 128, 3, 128),
+])
+def test_gmm(T, D, F, E, rt):
+    x = jax.random.normal(jax.random.key(0), (T, D))
+    w = jax.random.normal(jax.random.key(1), (E, D, F))
+    gids = jax.random.randint(jax.random.key(2), (T // rt,), 0, E)
+    got = gmm_pallas(x, w, gids, rt=rt)
+    want = ref.gmm_ref(x, w, gids)
+    assert jnp.max(jnp.abs(got - want)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# BSR SpMV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,Kb,BS,Ncb", [(4, 3, 32, 6), (8, 2, 64, 8),
+                                         (2, 5, 128, 4)])
+def test_bsr_spmv(R, Kb, BS, Ncb):
+    rng = np.random.default_rng(0)
+    bc = jnp.asarray(rng.integers(0, Ncb, (R, Kb)), jnp.int32)
+    blocks = jnp.asarray(rng.random((R, Kb, BS, BS)), jnp.float32)
+    x = jnp.asarray(rng.random(Ncb * BS), jnp.float32)
+    got = bsr_spmv_pallas(bc, blocks, x)
+    want = ref.bsr_spmv_ref(bc, blocks, x)
+    assert jnp.max(jnp.abs(got - want)) < 1e-3
+
+
+def test_spmv_end_to_end_vs_graph_oracle():
+    g = datasets.rmat(9, edge_factor=8, seed=2)
+    x = np.random.default_rng(1).random(g.n)
+    y = spmv_csr(g, x, bs=64)
+    want = sref.spmv_ref(g, x)
+    assert np.allclose(np.asarray(y), want, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_spmv_linearity_property(seed):
+    """SpMV is linear: A(ax) == a * A(x)."""
+    g = datasets.rmat(8, edge_factor=4, seed=seed % 100 + 1)
+    x = np.random.default_rng(seed).random(g.n)
+    y1 = np.asarray(spmv_csr(g, x, bs=64))
+    y2 = np.asarray(spmv_csr(g, 2.0 * x, bs=64))
+    assert np.allclose(y2, 2.0 * y1, rtol=1e-4, atol=1e-2)

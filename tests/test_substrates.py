@@ -1,0 +1,160 @@
+"""Substrate tests: optimizer, gradient compression, checkpoint/restore,
+fault-tolerant loop with injected failures + straggler watchdog, elastic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.compression import (EFState, dequantize, init_ef,
+                                     quantize_int8)
+from repro.runtime.fault_tolerance import (FailurePlan, InjectedFailure,
+                                           StragglerWatchdog, run_training)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=lambda s: 0.1, weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=lambda s: 1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    big = {"w": jnp.full(3, 1e6)}
+    new, state = opt.update(big, state, params)
+    assert float(global_norm(state.mu)) <= 0.11   # clipped before moments
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(peak_lr=1.0, warmup=10, total=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert float(lr(jnp.array(10))) == pytest.approx(1.0, abs=1e-2)
+    assert float(lr(jnp.array(100))) == pytest.approx(0.1, abs=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_bounded(seed):
+    x = jax.random.normal(jax.random.key(seed), (128,))
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize(q, scale) - x)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """With EF, the *accumulated* compressed signal tracks the true sum."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    residual = jnp.zeros(64)
+    acc = jnp.zeros(64)
+    for _ in range(50):
+        q, s = quantize_int8(g_true + residual)
+        sent = dequantize(q, s)
+        residual = (g_true + residual) - sent
+        acc = acc + sent
+    # mean of sent converges to g_true
+    assert float(jnp.abs(acc / 50 - g_true).max()) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore / elastic
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.int32)}}
+    ckpt.save(str(tmp_path), 3, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    out = ckpt.restore(str(tmp_path), 3, jax.tree.map(jnp.zeros_like, tree))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+def _toy_problem():
+    opt = AdamW(lr=lambda s: 0.05, weight_decay=0.0)
+
+    def init_state():
+        params = {"w": jnp.array([4.0])}
+        return params, opt.init(params)
+
+    def step_fn(params, opt_state, batch):
+        (loss), g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - batch) ** 2))(params)
+        params, opt_state = opt.update(g, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return init_state, step_fn
+
+
+def test_training_recovers_from_injected_failures(tmp_path):
+    init_state, step_fn = _toy_problem()
+    plan = FailurePlan(at_steps={7: "ici-timeout", 13: "preemption"})
+    res = run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                       total_steps=20, ckpt_dir=str(tmp_path),
+                       ckpt_every=5, failure_plan=plan)
+    assert res.final_step == 20
+    assert res.restarts == 2
+    assert res.metrics_history[-1]["loss"] < res.metrics_history[0]["loss"]
+
+
+def test_training_gives_up_after_max_restarts(tmp_path):
+    init_state, step_fn = _toy_problem()
+    plan = FailurePlan(at_steps={i: "crash" for i in range(0, 50)})
+    with pytest.raises(InjectedFailure):
+        run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                     total_steps=20, ckpt_dir=str(tmp_path),
+                     max_restarts=2, failure_plan=plan)
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = StragglerWatchdog(factor=2.0, window=8)
+    for i in range(8):
+        wd.observe(i, 0.01)
+    wd.observe(8, 0.5)
+    assert 8 in wd.flagged
+
+
+def test_resume_continues_not_restarts(tmp_path):
+    """Second call resumes from the checkpoint (optimizer momentum kept)."""
+    init_state, step_fn = _toy_problem()
+    run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                 total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=5)
+    res2 = run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                        total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=5)
+    assert res2.final_step == 12
+    assert len(res2.metrics_history) == 2   # only steps 10, 11 re-run

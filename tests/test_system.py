@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests: train a tiny model, loss decreases; serve
+greedy decode teacher-forced == forward; synthetic pipeline determinism."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import synth_batch
+from repro.models import build_model
+from repro.optim.adamw import AdamW, cosine_schedule
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("granite-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_training_reduces_loss(tiny):
+    cfg, model, params = tiny
+    opt = AdamW(lr=cosine_schedule(peak_lr=3e-3, warmup=5, total=100))
+    state = opt.init(params)
+    B, S = 4, 32
+    rng = np.random.default_rng(0)
+    tok = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tok), "labels": jnp.asarray(tok)}
+
+    @jax.jit
+    def step(p, s, b):
+        (loss, m), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+        p, s = opt.update(g, s, p)
+        return p, s, loss
+
+    losses = []
+    for _ in range(20):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+    assert np.isfinite(losses).all()
+
+
+def test_greedy_decode_consistency(tiny):
+    cfg, model, params = tiny
+    B, S = 2, 16
+    tok = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits, _ = model.forward(params, {"tokens": tok, "labels": tok})
+    cache = model.init_cache(B, S, jnp.float32)
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, tok[:, t:t + 1],
+                                      jnp.array(t, jnp.int32))
+    assert jnp.allclose(lg[:, 0], logits[:, -1], atol=1e-4)
+
+
+def test_synth_batch_deterministic():
+    cfg = get_config("qwen2-1.5b")
+    from repro.configs.base import TRAIN_4K
+    import dataclasses
+    shape = dataclasses.replace(TRAIN_4K, global_batch=2, seq_len=64)
+    b1 = synth_batch(cfg, shape, step=7)
+    b2 = synth_batch(cfg, shape, step=7)
+    b3 = synth_batch(cfg, shape, step=8)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].max() < cfg.vocab_size
