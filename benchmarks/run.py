@@ -7,6 +7,7 @@ the paper's vertices-per-tile regime (see DESIGN.md §2 scaling note).
 from __future__ import annotations
 
 import argparse
+import subprocess
 import sys
 import time
 
@@ -31,6 +32,11 @@ def main() -> None:
         ("fig10_queues", lambda: fig10_queues.main(scale)),
         ("fig11_scaling", lambda: fig11_scaling.main(scale)),
         ("moe_dispatch", moe_dispatch.main),
+        # subprocess: needs its own 8-fake-device jax, must not retopologize
+        # the sibling benchmarks in this process
+        ("noc_routing", lambda: subprocess.run(
+            [sys.executable, "-m", "benchmarks.noc_routing",
+             "--scale", str(min(scale, 11))], check=True)),
         ("roofline_table", roofline_table.main),
     ]
     for name, fn in figs:

@@ -2,11 +2,24 @@
 dataset, with the paper's target metrics (TEPS, TEPS/W, TEPS/$) and the
 design-space comparison the paper advocates (SRAM-only vs HBM packaging).
 
+``--distributed`` additionally runs all six apps on the REAL distributed
+shard_map path (8 fake host devices) through the shared owner-routed NoC
+layer in ``repro.core.routing``, validating each against its numpy oracle
+and printing per-app rounds / routed messages / IQ drops.
+
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
+      [--distributed]
 """
 import argparse
 import os
 import sys
+
+if (any(a.startswith("--dist") for a in sys.argv)  # argparse abbreviations
+        and "host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                               "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import numpy as np
 
@@ -19,14 +32,60 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import config_cost, evaluate, APPS  # noqa: E402
 
 
+def run_distributed(g, scale):
+    """All six apps on the shard_map path; oracle-checked, stats printed."""
+    from repro.core.compat import make_mesh
+    from repro.sparse.jax_apps import (dcra_bfs, dcra_histogram,
+                                       dcra_pagerank, dcra_spmv, dcra_sssp,
+                                       dcra_wcc)
+    mesh = make_mesh((8,), ("data",))
+    x = np.random.default_rng(0).random(g.n)
+    els = datasets.histogram_data(1 << 14, 256)
+    hdr = f"{'app':10s} {'rounds':>7s} {'messages':>10s} {'drops':>7s} " \
+          f"{'max_err':>10s}"
+    print("distributed path (8 devices, owner-routed rounds)")
+    print(hdr)
+    print("-" * len(hdr))
+
+    def row(name, got, want, stats):
+        err = float(np.max(np.abs(np.asarray(got, np.float64) -
+                                  np.asarray(want, np.float64))))
+        print(f"{name:10s} {stats.rounds:7d} {stats.total_messages:10d} "
+              f"{stats.total_drops:7d} {err:10.2e}")
+
+    from repro.sparse.jax_apps import AppStats
+    y, drops = dcra_spmv(g, x, mesh, capacity_factor=3.0)
+    one = AppStats(1, np.array([g.nnz]), np.array([int(drops)]))
+    row("spmv", y, ref.spmv_ref(g, x), one)
+    h, drops = dcra_histogram(els, 256, mesh, capacity_factor=3.0)
+    one = AppStats(1, np.array([len(els)]), np.array([int(drops)]))
+    row("histogram", h, ref.histogram_ref(els, 256), one)
+    d, st = dcra_bfs(g, 0, mesh)
+    row("bfs", d, ref.bfs_ref(g, 0), st)
+    s, st = dcra_sssp(g, 0, mesh)
+    row("sssp", np.where(np.isfinite(s), s, -1),
+        np.where(np.isfinite(ref.sssp_ref(g, 0)), ref.sssp_ref(g, 0), -1),
+        st)
+    p, st = dcra_pagerank(g, mesh)
+    row("pagerank", p, ref.pagerank_ref(g), st)
+    w, st = dcra_wcc(g, mesh)
+    row("wcc", w, ref.wcc_ref(g), st)
+    print()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--distributed", action="store_true",
+                    help="also run the six apps on the shard_map path")
     args = ap.parse_args()
 
     g = datasets.rmat(args.scale, edge_factor=16)
     print(f"RMAT-{args.scale}: V={g.n} E={g.nnz} "
           f"({g.memory_bytes() / 2**20:.1f} MB CSR)\n")
+
+    if args.distributed:
+        run_distributed(g, args.scale)
 
     packagings = {
         "DCRA-HBM (32x32)": EngineConfig(

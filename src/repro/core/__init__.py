@@ -1,9 +1,15 @@
-# The paper's primary contribution, adapted to TPU/JAX (see DESIGN.md):
+# The paper's primary contribution, adapted to TPU/JAX (see README.md):
 # task-based PGAS execution (task_engine), software-reconfigurable torus
-# topology model (topology), queue & SRAM-cache models (queues, cache), and
-# the DCRA owner-routed hierarchical MoE dispatch (dispatch).
+# topology model (topology), queue & SRAM-cache models (queues, cache), the
+# shared owner-routed NoC collective layer (routing), and the DCRA
+# owner-routed hierarchical MoE dispatch built on it (dispatch).
 from .cache import CacheModel, DRAMConfig, SRAMConfig          # noqa: F401
+from .compat import make_mesh, set_mesh, shard_map_unchecked   # noqa: F401
 from .dispatch import MeshInfo, moe_dcra                        # noqa: F401
 from .queues import QueueConfig, QueueStats                     # noqa: F401
+from .routing import (bucket, fused_all_to_all, gather_rows,    # noqa: F401
+                      noc_all_to_all, owner_route,
+                      owner_route_hier, positions_by_dest,
+                      reduce_received, round8, slot_scatter)
 from .task_engine import EngineConfig, RunStats, TaskEngine     # noqa: F401
 from .topology import TileGrid                                  # noqa: F401

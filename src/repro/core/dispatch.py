@@ -13,8 +13,12 @@ Only the payload (x) and the local-expert id travel; source-slot and gate
 metadata stay on the devices that need them for the return path, so the
 collective bytes are the minimum the routing requires.
 
+The bucketing / fused-payload all_to_all / pod-portal machinery lives in
+:mod:`repro.core.routing` (shared with the distributed graph apps in
+:mod:`repro.sparse.jax_apps`); this module keeps only what is MoE-specific:
+the dispatch plan, the expert FFN, gating, and the return/combine path.
 Everything is built from ``segment_sum`` scatter/gather (differentiable) and
-``jax.lax.all_to_all`` under ``shard_map``.
+one fused ``all_to_all`` per NoC stage under ``shard_map``.
 """
 from __future__ import annotations
 
@@ -25,10 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:                                     # jax >= 0.7 exposes jax.shard_map
-    shard_map = jax.shard_map
-except AttributeError:                   # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from .compat import shard_map_unchecked
+from .routing import (bucket as _bucket, fused_all_to_all, gather_rows,
+                      noc_all_to_all as _a2a, round8 as _round8,
+                      slot_scatter as _slot_scatter)
 
 
 @dataclass(frozen=True)
@@ -84,50 +88,6 @@ class MeshInfo:
             if num_experts % total == 0:
                 return group, spans, self.tp_axis not in group
         return (self.expert_axis,), False, True
-
-
-def _round8(x: int) -> int:
-    return max(8, -(-x // 8) * 8)
-
-
-def _positions_by_dest(dest, valid, n_buckets):
-    """Stable position of each *valid* task within its destination bucket."""
-    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)
-    onehot = onehot * valid[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - 1
-    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
-
-
-def _slot_scatter(data, slot, valid, num_slots):
-    """Scatter rows of ``data`` into slots (each slot receives <= 1 row)."""
-    seg = jnp.where(valid, slot, num_slots)
-    if data.ndim > 1:
-        data = data * valid[:, None].astype(data.dtype)
-    else:
-        data = data * valid.astype(data.dtype)
-    return jax.ops.segment_sum(data, seg, num_segments=num_slots + 1)[:num_slots]
-
-
-def _bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap):
-    """Capacity-bounded bucketing (the IQ). Returns (xb, ints, pos, n_drop).
-
-    xb [n_buckets*cap, D]; ints: like aux_ints but slot-ordered (-1 = empty);
-    also returns each task's slot (-1 if dropped) for building return maps.
-    """
-    pos = _positions_by_dest(dest, valid, n_buckets)
-    keep = valid & (pos < cap)
-    slot = dest * cap + jnp.minimum(pos, cap - 1)
-    total = n_buckets * cap
-    xb = _slot_scatter(x_tasks, slot, keep, total)
-    ints = [_slot_scatter((a + 1).astype(jnp.int32), slot, keep, total) - 1
-            for a in aux_ints]
-    task_slot = jnp.where(keep, slot, -1)
-    n_drop = jnp.sum(valid & ~keep)
-    return xb, ints, task_slot, n_drop
-
-
-def _a2a(x, axis):
-    return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
 
 
 def _expert_ffn(xe, wg, wu, wd, tp_axis, n_tp):
@@ -225,20 +185,13 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
         cap1 = _round8(int(T_l * K * mc.capacity_factor / n_ex))
         all_valid = jnp.ones_like(eids_f, dtype=bool)
 
-        def _gather_rows(src_table, src_ids):
-            """rows = src_table[src_ids] with -1 -> zeros (one gather; no
-            K-fold payload replication before bucketing)."""
-            rows = src_table[jnp.maximum(src_ids, 0)]
-            return rows * (src_ids >= 0)[:, None].astype(rows.dtype)
-
         if not spans_pods:
-            # ---- single-stage a2a (tile-NoC) ---------------------------
+            # ---- single-stage fused a2a (tile-NoC) ---------------------
             _, (eid1, tok1), slot_of_task, _ = _bucket(
                 src_f[:, None] * 0, owner, all_valid,
                 [eids_f % E_local, src_f], n_ex, cap1)
-            xb1 = _gather_rows(xf, tok1)
-            xr = _a2a(xb1, group)
-            eidr = _a2a(eid1, group)
+            xb1 = gather_rows(xf, tok1)
+            xr, (eidr,) = fused_all_to_all(xb1, [eid1], group)
         else:
             # ---- stage 1 over expert axis (tile-NoC) -------------------
             e_coord = owner % n_ex
@@ -246,10 +199,8 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
             _, (pc1, eid1, tok1), slot_of_task, _ = _bucket(
                 src_f[:, None] * 0, e_coord, all_valid,
                 [p_coord, eids_f % E_local, src_f], n_ex, cap1)
-            xb1 = _gather_rows(xf, tok1)
-            xs1 = _a2a(xb1, group)
-            pcs = _a2a(pc1, group)
-            eids1 = _a2a(eid1, group)
+            xb1 = gather_rows(xf, tok1)
+            xs1, (pcs, eids1) = fused_all_to_all(xb1, [pc1, eid1], group)
             n1 = xs1.shape[0]
             # ---- stage 2 over pod axis (die-NoC portal) ----------------
             valid1 = pcs >= 0
@@ -257,9 +208,8 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
             _, (eid2, slot1_of_s2), _, _ = _bucket(
                 pcs[:, None] * 0, jnp.maximum(pcs, 0), valid1,
                 [eids1, jnp.arange(n1, dtype=jnp.int32)], n_pod, cap2)
-            xb2 = _gather_rows(xs1, slot1_of_s2)
-            xr = _a2a(xb2, info.pod_axis)
-            eidr = _a2a(eid2, info.pod_axis)
+            xb2 = gather_rows(xs1, slot1_of_s2)
+            xr, (eidr,) = fused_all_to_all(xb2, [eid2], info.pod_axis)
 
         # --- local expert execution (owner computes) --------------------
         N_r = xr.shape[0]
@@ -274,7 +224,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
             _, (srce,), _, _ = _bucket(
                 validr[:, None].astype(jnp.int32) * 0, jnp.maximum(eidr, 0),
                 validr, [jnp.arange(N_r, dtype=jnp.int32)], E_local, cap_e)
-            xe = _gather_rows(xr, srce)
+            xe = gather_rows(xr, srce)
             ye_b = _expert_ffn(xe.reshape(E_local, cap_e, D).astype(xb.dtype),
                                wg, wu, wd, info.tp_axis, n_tp)
             ye = _slot_scatter(ye_b.reshape(E_local * cap_e, D),
@@ -310,10 +260,9 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
                                                axis=1)
         return out, aux
 
-    fn = shard_map(kernel, mesh=info.mesh,
-                   in_specs=(*w_specs, x_spec),
-                   out_specs=(x_spec, P()),
-                   check_vma=False)
+    fn = shard_map_unchecked(kernel, mesh=info.mesh,
+                             in_specs=(*w_specs, x_spec),
+                             out_specs=(x_spec, P()))
     out, aux = fn(params["router"], params["wg"], params["wu"], params["wd"],
                   x)
     return out, aux

@@ -1,0 +1,209 @@
+"""Owner-routed NoC collective layer — THE shared DCRA primitive.
+
+Everything DCRA routes — MoE tokens to expert-owning tiles
+(:mod:`repro.core.dispatch`) and graph/sparse update tasks to
+vertex-owning tiles (:mod:`repro.sparse.jax_apps`) — is the same motion:
+
+  1. *bucket*: tasks are grouped by destination shard into capacity-bounded
+     buckets (the paper's input queue; overflow is dropped and counted);
+  2. *deliver*: ONE ``all_to_all`` per NoC round carries a *fused payload* —
+     int32 metadata columns are bitcast (bytes reinterpreted, never
+     converted) to f32 and packed next to the value columns, so index+value
+     travel in a single collective instead of two;
+  3. optionally *hierarchical*: when shards span pods, stage 1 routes over
+     the intra-pod axis to the destination's "portal" (the device in the
+     sender's pod sharing the destination's intra-pod coordinate), stage 2
+     hops once over the pod axis (die-NoC) — the paper's §III-A two-level
+     torus.
+
+All functions here are **per-shard**: they are meant to be called *inside*
+a ``shard_map`` kernel (possibly inside a ``lax.while_loop`` for iterative
+apps), so callers control layout, reduction, and the return path.
+
+Shard-id convention for the hierarchical path: global shard
+``g = pod * n_intra + intra`` — pods are the slow axis, matching a mesh
+declared as ``('pod', ..., intra_axis)``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def round8(x: int) -> int:
+    """Round a capacity up to a multiple of 8 (TPU lane alignment)."""
+    return max(8, -(-x // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# bucketing (the bounded IQ)
+# ---------------------------------------------------------------------------
+
+def positions_by_dest(dest, valid, n_buckets):
+    """Stable position of each *valid* task within its destination bucket."""
+    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)
+    onehot = onehot * valid[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+
+
+def slot_scatter(data, slot, valid, num_slots):
+    """Scatter rows of ``data`` into slots (each slot receives <= 1 row)."""
+    seg = jnp.where(valid, slot, num_slots)
+    if data.ndim > 1:
+        data = data * valid[:, None].astype(data.dtype)
+    else:
+        data = data * valid.astype(data.dtype)
+    return jax.ops.segment_sum(data, seg, num_segments=num_slots + 1)[:num_slots]
+
+
+def bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap):
+    """Capacity-bounded bucketing (the IQ). Returns (xb, ints, slot, n_drop).
+
+    xb [n_buckets*cap, D]; ints: like aux_ints but slot-ordered (-1 = empty);
+    also returns each task's slot (-1 if dropped) for building return maps.
+    """
+    pos = positions_by_dest(dest, valid, n_buckets)
+    keep = valid & (pos < cap)
+    slot = dest * cap + jnp.minimum(pos, cap - 1)
+    total = n_buckets * cap
+    xb = slot_scatter(x_tasks, slot, keep, total)
+    ints = [slot_scatter((a + 1).astype(jnp.int32), slot, keep, total) - 1
+            for a in aux_ints]
+    task_slot = jnp.where(keep, slot, -1)
+    n_drop = jnp.sum(valid & ~keep)
+    return xb, ints, task_slot, n_drop
+
+
+def gather_rows(table, ids):
+    """rows = table[ids] with id -1 -> zero rows (one gather; no K-fold
+    payload replication before bucketing)."""
+    rows = table[jnp.maximum(ids, 0)]
+    return rows * (ids >= 0)[:, None].astype(rows.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the NoC round: one fused all_to_all
+# ---------------------------------------------------------------------------
+
+def noc_all_to_all(x, axis):
+    """One NoC round over ``axis`` (tiled all_to_all on the leading dim)."""
+    return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
+
+
+def fused_all_to_all(vals: Optional[jax.Array], int_cols: Sequence[jax.Array],
+                     axis) -> Tuple[Optional[jax.Array], List[jax.Array]]:
+    """Deliver value columns + int32 metadata columns in ONE all_to_all.
+
+    ``vals`` [N, D] (or [N], or None) float payload; ``int_cols`` are [N]
+    int32 arrays (slot ids, expert ids, ...). Ints are *bitcast* to f32 —
+    bytes are reinterpreted, never converted — and packed next to the
+    payload columns, so each NoC round issues a single collective. The
+    round-trip is exact. Half-width payloads (bf16/f16) are packed two per
+    f32 wire lane (bitcast, not upcast), so fusing never inflates the
+    collective bytes; other float dtypes ride the wire as f32.
+    """
+    if vals is None and not int_cols:
+        raise ValueError("nothing to route")
+    cols = []
+    squeeze = False
+    dtype = None
+    d_vals = 0
+    half = False
+    if vals is not None:
+        dtype = vals.dtype
+        v2 = vals
+        if v2.ndim == 1:
+            v2, squeeze = v2[:, None], True
+        d_vals = v2.shape[1]
+        half = dtype.itemsize == 2
+        if half:
+            if d_vals % 2:
+                v2 = jnp.concatenate([v2, jnp.zeros_like(v2[:, :1])], axis=1)
+            wire = jax.lax.bitcast_convert_type(
+                v2.reshape(v2.shape[0], -1, 2), jnp.float32)
+        else:
+            wire = v2.astype(jnp.float32)
+        cols.append(wire)
+    for c in int_cols:
+        packed_i = jax.lax.bitcast_convert_type(c.astype(jnp.int32),
+                                                jnp.float32)
+        cols.append(packed_i[:, None])
+    packed = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+    recv = noc_all_to_all(packed, axis)
+    n_int = len(int_cols)
+    ints_out = []
+    if n_int:
+        tail = recv[:, recv.shape[1] - n_int:]
+        ints_out = [jax.lax.bitcast_convert_type(tail[:, i], jnp.int32)
+                    for i in range(n_int)]
+    if vals is None:
+        return None, ints_out
+    v_wire = recv[:, :recv.shape[1] - n_int]
+    if half:
+        v_out = jax.lax.bitcast_convert_type(v_wire, dtype)
+        v_out = v_out.reshape(v_out.shape[0], -1)[:, :d_vals]
+    else:
+        v_out = v_wire.astype(dtype)
+    if squeeze:
+        v_out = v_out[:, 0]
+    return v_out, ints_out
+
+
+# ---------------------------------------------------------------------------
+# owner-routed rounds (bucket + fused a2a), flat and hierarchical
+# ---------------------------------------------------------------------------
+
+def owner_route(vals, slot_ids, owner, valid, n_shards, cap, axis):
+    """One flat NoC round: route ``(slot_ids, vals)`` tasks to ``owner``.
+
+    Per-shard (call inside shard_map). vals [N] f32 payload, slot_ids [N]
+    int32 destination slot at the owner, owner [N] in [0, n_shards).
+    Returns (recv_slot [n_shards*cap], recv_val, n_drop_local) — recv_slot
+    is -1 for empty queue entries; n_drop_local counts this shard's
+    IQ-overflow drops (psum over ``axis`` for the global count).
+    """
+    xb, (slot_b,), _, n_drop = bucket(vals[:, None], owner, valid,
+                                      [slot_ids], n_shards, cap)
+    recv_vals, (recv_slot,) = fused_all_to_all(xb, [slot_b], axis)
+    return recv_slot, recv_vals[:, 0], n_drop
+
+
+def owner_route_hier(vals, slot_ids, owner, valid, n_intra, intra_axis,
+                     n_pods, pod_axis, cap1, cap2):
+    """Two-stage pod/portal NoC round (paper §III-A two-level torus).
+
+    Stage 1 (tile-NoC): tasks go to the device in the *sender's* pod with
+    the destination's intra-pod coordinate — the per-pod portal — so every
+    package-boundary message is aggregated there. Stage 2 (die-NoC): the
+    portal forwards over the pod axis, exactly one die crossing.
+    Returns (recv_slot [n_pods*cap2], recv_val, n_drop_local).
+    """
+    e_coord = owner % n_intra
+    p_coord = owner // n_intra
+    xb, (pc_b, slot_b), _, drop1 = bucket(vals[:, None], e_coord, valid,
+                                          [p_coord, slot_ids], n_intra, cap1)
+    v1, (pc1, slot1) = fused_all_to_all(xb, [pc_b, slot_b], intra_axis)
+    valid1 = pc1 >= 0
+    xb2, (slot2_b,), _, drop2 = bucket(v1, jnp.maximum(pc1, 0), valid1,
+                                       [slot1], n_pods, cap2)
+    v2, (recv_slot,) = fused_all_to_all(xb2, [slot2_b], pod_axis)
+    return recv_slot, v2[:, 0], drop1 + drop2
+
+
+def reduce_received(recv_slot, recv_val, n_local, op):
+    """Apply received tasks at the owner: segment add/min into local slots."""
+    valid = recv_slot >= 0
+    seg = jnp.where(valid, recv_slot, n_local)
+    if op == "add":
+        y = jax.ops.segment_sum(jnp.where(valid, recv_val, 0.0), seg,
+                                num_segments=n_local + 1)[:n_local]
+    elif op == "min":
+        y = jax.ops.segment_min(jnp.where(valid, recv_val, jnp.inf), seg,
+                                num_segments=n_local + 1)[:n_local]
+        y = jnp.where(jnp.isfinite(y), y, jnp.inf)
+    else:
+        raise ValueError(op)
+    return y

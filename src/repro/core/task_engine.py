@@ -47,6 +47,7 @@ class RoundStats:
     tasks_total: int = 0
     stream_bytes: float = 0.0
     random_bytes: float = 0.0
+    drops: int = 0                     # IQ-overflow discards (modeled)
     barrier: bool = False              # epoch boundary (PageRank)
 
 
@@ -71,6 +72,10 @@ class RunStats:
     def total_die_crossings(self) -> int:
         return sum(r.die_crossings for r in self.rounds)
 
+    @property
+    def total_drops(self) -> int:
+        return sum(r.drops for r in self.rounds)
+
 
 class TaskEngine:
     """Owner-computes execution over a virtual tile grid."""
@@ -93,7 +98,8 @@ class TaskEngine:
               target: Optional[np.ndarray] = None, op: str = "add",
               payload_words: int = 2,
               stream_bytes_per_task: float = 0.0,
-              random_bytes_per_task: float = 0.0) -> RoundStats:
+              random_bytes_per_task: float = 0.0,
+              iq_capacity: Optional[int] = None) -> RoundStats:
         """Deliver one round of task invocations.
 
         src_idx/dst_idx: global item ids (message endpoints define tiles);
@@ -101,6 +107,15 @@ class TaskEngine:
         ('min'|'add'|'store'). Mutates ``target`` in place; returns stats.
         ``target=None`` records routing stats only (task-invocation
         messages whose effect is to spawn downstream tasks).
+
+        ``iq_capacity`` models the bounded input queue the distributed
+        routing layer (:mod:`repro.core.routing`) enforces: each
+        (src tile -> dst tile) ingress channel accepts at most
+        ``iq_capacity`` tasks per round; the overflow count is recorded in
+        ``RoundStats.drops``. The reduction itself stays exact — drops are
+        *modeled* traffic loss for the cost model, and the analytic count
+        equals the real drop count of the shard_map path for the same task
+        stream (property-tested in tests/test_routing.py).
         """
         g = self.cfg.grid
         src_t = self.owner(np.asarray(src_idx))
@@ -122,6 +137,11 @@ class TaskEngine:
         in_per_tile = np.bincount(dst_t, minlength=self.T)
         out_per_tile = np.bincount(src_t, minlength=self.T)
         rs.tasks_per_tile_peak = int(in_per_tile.max(initial=0))
+        if iq_capacity is not None:
+            # O(n_tasks): only touched (src,dst) channels, never a dense TxT
+            _, per_chan = np.unique(src_t * self.T + dst_t,
+                                    return_counts=True)
+            rs.drops = int(np.maximum(per_chan - iq_capacity, 0).sum())
         rs.stream_bytes = stream_bytes_per_task * len(dst_idx)
         rs.random_bytes = random_bytes_per_task * len(dst_idx)
         self.stats.queue.record(task, in_per_tile, out_per_tile)

@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 import dataclasses  # noqa: E402
 
 from ..configs import ARCH_IDS, get_config           # noqa: E402
+from ..core.compat import set_mesh as compat_set_mesh   # noqa: E402
 from ..costmodel.params import (TPU_HBM_BW, TPU_ICI_BW,  # noqa: E402
                                 TPU_PEAK_BF16_FLOPS)
 from ..models.model_zoo import build_model            # noqa: E402
@@ -67,7 +68,7 @@ def _compile_for(cfg, shape, mesh, fsdp=True, hierarchical=True,
     p_shard = param_shardings(cfg, mesh, params_shape, fsdp=fsdp)
     params_in = _struct_with_sharding(params_shape, p_shard)
 
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         if shape.kind in ("train", "prefill"):
             batch = batch_struct(cfg, shape, mesh)
             if shape.kind == "train":

@@ -12,16 +12,9 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-from jax.sharding import AxisType
-
 from ..configs.base import ArchConfig
+from ..core.compat import make_mesh as _mk  # noqa: F401 (re-exported idiom)
 from ..core.dispatch import MeshInfo
-
-
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

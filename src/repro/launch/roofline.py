@@ -18,6 +18,7 @@ import re
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from ..core.compat import cost_analysis as compat_cost_analysis
 from ..costmodel.params import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_BF16_FLOPS
 
 _DTYPE_BYTES = {
@@ -84,9 +85,7 @@ class Roofline:
 
 
 def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):       # older jax returns [dict]
-        cost = cost[0]
+    cost = compat_cost_analysis(compiled)
     flops = float(cost.get("flops", 0.0))
     mem_bytes = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -39,8 +39,8 @@ def main():
     shape = ShapeConfig("train", args.seq, args.batch, "train")
     model = build_model(cfg)
     opt = default_optimizer()
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from ..core.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     raw_step = make_train_step(model, opt, mesh, shape)
     step_jit = jax.jit(raw_step, donate_argnums=(0, 1))
 

@@ -47,6 +47,46 @@ def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
     return from_edges(V, src, dst, w)
 
 
+def erdos_renyi(n: int, avg_degree: float = 8.0, seed: int = 5,
+                undirected: bool = True) -> CSR:
+    """G(n, p) with p = avg_degree / n (uniform degree — the paper's
+    counterpoint to the power-law RMAT / Wikipedia graphs)."""
+    rng = np.random.default_rng(seed)
+    E = int(n * avg_degree)
+    src = rng.integers(0, n, E)
+    dst = rng.integers(0, n, E)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if undirected:
+        # weight per *undirected* edge (w(a,b) == w(b,a)), then mirror
+        a, b = np.minimum(src, dst), np.maximum(src, dst)
+        _, idx = np.unique(a * n + b, return_index=True)
+        a, b = a[idx], b[idx]
+        w = rng.integers(1, 256, len(a)).astype(np.float32)
+        src = np.concatenate([a, b])
+        dst = np.concatenate([b, a])
+        w = np.concatenate([w, w])
+        return from_edges(n, src, dst, w)
+    _, idx = np.unique(src * n + dst, return_index=True)
+    src, dst = src[idx], dst[idx]
+    w = rng.integers(1, 256, len(src)).astype(np.float32)
+    return from_edges(n, src, dst, w)
+
+
+def disconnected_pair(n_each: int = 128, avg_degree: float = 6.0,
+                      seed: int = 11) -> CSR:
+    """Two ER components with no edges between them (BFS/WCC edge case:
+    unreachable vertices / multiple components)."""
+    a = erdos_renyi(n_each, avg_degree, seed=seed)
+    b = erdos_renyi(n_each, avg_degree, seed=seed + 1)
+    ra, rb = a.row_of(), b.row_of()
+    src = np.concatenate([ra, rb + n_each])
+    dst = np.concatenate([a.col_idx.astype(np.int64),
+                          b.col_idx.astype(np.int64) + n_each])
+    w = np.concatenate([a.values, b.values])
+    return from_edges(2 * n_each, src, dst, w)
+
+
 def wiki_like(n_vertices: int = 4096, avg_degree: int = 25,
               seed: int = 7) -> CSR:
     """Wikipedia-like: heavier-tailed in/out degree (Zipf), directed."""

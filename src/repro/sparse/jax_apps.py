@@ -1,33 +1,40 @@
 """Executable JAX implementations of the paper apps — single-device jnp and
 *distributed* owner-routed rounds under shard_map.
 
-The distributed primitive mirrors DCRA exactly: updates are tasks
-``(dest_id, value)``; the owner tile of ``dest_id`` is static (cyclic PGAS);
-tasks are bucketed per owner with a bounded queue (capacity = IQ size,
-overflow dropped and counted) and delivered with ONE all-to-all per round —
-the same machinery as :mod:`repro.core.dispatch`, at graph granularity.
+ALL SIX paper applications (§IV-A) now run on the distributed path: SpMV
+and Histogram as one owner-routed scatter round, and BFS / SSSP / PageRank /
+WCC as iterative executables (``lax.while_loop`` / ``fori_loop``) where every
+round re-enters the shared NoC collective layer in
+:mod:`repro.core.routing` — the same capacity-bounded bucketing + fused
+all_to_all machinery the MoE dispatch uses, at graph granularity.
 
-These run the REAL computation on devices (validated against the numpy
-oracles); the analytic :mod:`repro.core.task_engine` remains the
-instrumented twin used for the paper's energy/cost figures.
+Layouts mirror DCRA's cyclic PGAS: vertex ``v`` lives on device
+``v % n_dev`` at local slot ``v // n_dev``; edges are partitioned by the
+owner of their *source* vertex so reading the frontier value is tile-local
+and only the per-edge update crosses the NoC (tasks ``(dest, value)`` with
+bounded input queues; overflow dropped and counted).
+
+Each app returns per-round message/drop counts as :class:`AppStats`,
+convertible to the cost model's ``RunStats`` — the executable path and the
+analytic :mod:`repro.core.task_engine` twin expose the same instrumentation
+shape.
 """
 from __future__ import annotations
 
-import functools
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import CSR
-
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
 from jax.sharding import PartitionSpec as P
+
+from ..core.compat import shard_map_unchecked
+from ..core.routing import (owner_route, owner_route_hier, reduce_received,
+                            round8)
+from ..core.task_engine import RoundStats, RunStats
+from .csr import CSR
 
 
 # ---------------------------------------------------------------------------
@@ -59,70 +66,108 @@ def bfs_jnp(rows, cols, n, root, max_levels: Optional[int] = None):
 
 
 # ---------------------------------------------------------------------------
+# per-round instrumentation (the executable twin of RunStats)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AppStats:
+    """Per-round NoC counters from a distributed run.
+
+    ``messages`` counts routed tasks per round (including owner-local ones —
+    they occupy IQ slots just the same); ``drops`` counts IQ-overflow
+    discards. Convert with :meth:`to_run_stats` for the cost model.
+    """
+    rounds: int
+    messages: np.ndarray          # [rounds] int64
+    drops: np.ndarray             # [rounds] int64
+
+    @property
+    def total_messages(self) -> int:
+        return int(self.messages.sum())
+
+    @property
+    def total_drops(self) -> int:
+        return int(self.drops.sum())
+
+    def to_run_stats(self, payload_words: int = 2,
+                     word_bytes: int = 8) -> RunStats:
+        rs = RunStats()
+        for m, d in zip(self.messages.tolist(), self.drops.tolist()):
+            rs.rounds.append(RoundStats(
+                messages=int(m),
+                payload_bytes=int(m) * payload_words * word_bytes,
+                tasks_total=int(m),
+                drops=int(d)))
+        return rs
+
+
+def _collect_stats(rounds, msgs, drops) -> AppStats:
+    r = int(rounds)
+    return AppStats(rounds=r,
+                    messages=np.asarray(msgs)[:r].astype(np.int64),
+                    drops=np.asarray(drops)[:r].astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
 # the DCRA owner-routed round (distributed)
 # ---------------------------------------------------------------------------
 
-def _round8(v):
-    return max(8, -(-v // 8) * 8)
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
 def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
-                 capacity_factor: float = 1.5):
+                 capacity_factor: float = 1.5, pod_axis=None):
     """Owner-routed scatter-reduce: one NoC round.
 
-    dest/vals: [E] sharded over ``axis`` (edge-parallel tasks);
-    returns y [n] sharded over ``axis`` (cyclic owner layout: item i lives
+    dest/vals: [E] sharded over the device axes (edge-parallel tasks);
+    returns y [n] sharded the same way (cyclic owner layout: item i lives
     on device i % n_dev at local slot i // n_dev) plus the dropped-task
     count (queue overflow).
+
+    ``pod_axis`` selects the hierarchical pod/portal two-stage path
+    (paper §III-A): stage 1 aggregates at the per-pod portal over ``axis``
+    (tile-NoC), stage 2 crosses pods exactly once (die-NoC).
     """
     n_dev = mesh.devices.size
     e_local = dest.shape[0] // n_dev
-    cap = _round8(int(e_local * capacity_factor / n_dev))
     n_local = -(-n // n_dev)
-    init = 0.0 if op == "add" else jnp.inf
+    spec = P((pod_axis, axis)) if pod_axis else P(axis)
 
-    def kernel(dest_b, vals_b):
-        valid_in = dest_b >= 0                     # padding -> no task
-        dest_c = jnp.maximum(dest_b, 0)
-        owner = dest_c % n_dev
-        slot_local = dest_c // n_dev
-        # bucket by owner with bounded queue (the IQ)
-        onehot = jax.nn.one_hot(owner, n_dev, dtype=jnp.int32)
-        onehot = onehot * valid_in[:, None].astype(jnp.int32)
-        pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - 1,
-                                  owner[:, None], 1)[:, 0]
-        keep = valid_in & (pos < cap)
-        slot = owner * cap + jnp.minimum(pos, cap - 1)
-        send_idx = jax.ops.segment_sum(
-            (slot_local + 1) * keep, jnp.where(keep, slot, n_dev * cap),
-            num_segments=n_dev * cap + 1)[:-1] - 1
-        send_val = jax.ops.segment_sum(
-            vals_b * keep, jnp.where(keep, slot, n_dev * cap),
-            num_segments=n_dev * cap + 1)[:-1]
-        dropped = jnp.sum(valid_in & ~keep)
-        # one all-to-all = the NoC round
-        recv_idx = jax.lax.all_to_all(send_idx, axis, 0, 0, tiled=True)
-        recv_val = jax.lax.all_to_all(send_val, axis, 0, 0, tiled=True)
-        valid = recv_idx >= 0
-        seg = jnp.where(valid, recv_idx, n_local)
-        if op == "add":
-            y = jax.ops.segment_sum(jnp.where(valid, recv_val, 0.0), seg,
-                                    num_segments=n_local + 1)[:n_local]
-        else:
-            y = jax.ops.segment_min(jnp.where(valid, recv_val, jnp.inf), seg,
-                                    num_segments=n_local + 1)[:n_local]
-            y = jnp.where(jnp.isfinite(y), y, jnp.inf)
-        return y, jax.lax.psum(dropped, axis)
+    if pod_axis is None:
+        cap = round8(int(e_local * capacity_factor / n_dev))
 
-    return shard_map(kernel, mesh=mesh, in_specs=(P(axis), P(axis)),
-                     out_specs=(P(axis), P()), check_vma=False)(dest, vals)
+        def kernel(dest_b, vals_b):
+            valid = dest_b >= 0                    # padding -> no task
+            dest_c = jnp.maximum(dest_b, 0)
+            recv_slot, recv_val, n_drop = owner_route(
+                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
+                n_dev, cap, axis)
+            y = reduce_received(recv_slot, recv_val, n_local, op)
+            return y, jax.lax.psum(n_drop, axis)
+    else:
+        sizes = _axis_sizes(mesh)
+        n_intra, n_pods = sizes[axis], sizes[pod_axis]
+        cap1 = round8(int(e_local * capacity_factor / n_intra))
+        cap2 = round8(int(n_intra * cap1 * capacity_factor / n_pods))
+
+        def kernel(dest_b, vals_b):
+            valid = dest_b >= 0
+            dest_c = jnp.maximum(dest_b, 0)
+            recv_slot, recv_val, n_drop = owner_route_hier(
+                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
+                n_intra, axis, n_pods, pod_axis, cap1, cap2)
+            y = reduce_received(recv_slot, recv_val, n_local, op)
+            return y, jax.lax.psum(n_drop, (pod_axis, axis))
+
+    return shard_map_unchecked(kernel, mesh=mesh, in_specs=(spec, spec),
+                               out_specs=(spec, P()))(dest, vals)
 
 
 def owner_layout(arr_n, n_dev):
     """Reorder a dense [n] array into cyclic-owner order (device-major)."""
     n = arr_n.shape[0]
     n_local = -(-n // n_dev)
-    pad = n_local * n_dev - n
     idx = jnp.arange(n_local * n_dev)
     src = (idx % n_local) * n_dev + idx // n_local   # device-major -> global
     src = jnp.minimum(src, n - 1)
@@ -138,8 +183,21 @@ def from_owner_layout(y_sharded, n, n_dev):
     return y_sharded[pos]
 
 
+def _owner_pack_np(arr, n_dev, fill):
+    """numpy owner_layout with a chosen fill for the padding slots."""
+    arr = np.asarray(arr, np.float64)
+    n = len(arr)
+    n_local = -(-n // n_dev)
+    idx = np.arange(n_local * n_dev)
+    g = (idx % n_local) * n_dev + idx // n_local
+    valid = g < n
+    out = np.full(n_local * n_dev, fill, np.float64)
+    out[valid] = arr[g[valid]]
+    return out, valid
+
+
 def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
-              capacity_factor: float = 2.0, seed: int = 0):
+              capacity_factor: float = 2.0, seed: int = 0, pod_axis=None):
     """Distributed y = A @ x via one owner-routed round.
 
     Edges are shuffled once (host-side): CSR order concentrates a
@@ -160,12 +218,13 @@ def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
     vals_eff = jnp.where(jnp.arange(E + pad) < E,
                          vals_p * jnp.asarray(x, jnp.float32)[cols_p], 0.0)
     y_sh, dropped = dcra_scatter(rows_p, vals_eff, g.n, mesh, axis,
-                                 op="add", capacity_factor=capacity_factor)
+                                 op="add", capacity_factor=capacity_factor,
+                                 pod_axis=pod_axis)
     return from_owner_layout(y_sh, g.n, n_dev), dropped
 
 
 def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
-                   capacity_factor: float = 2.0):
+                   capacity_factor: float = 2.0, pod_axis=None):
     n_dev = mesh.devices.size
     E = len(elements)
     pad = -(-E // n_dev) * n_dev - E
@@ -173,5 +232,202 @@ def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
                    constant_values=-1)
     ones = jnp.where(jnp.arange(E + pad) < E, 1.0, 0.0)
     y_sh, dropped = dcra_scatter(dest, ones, n_bins, mesh, axis, op="add",
-                                 capacity_factor=capacity_factor)
+                                 capacity_factor=capacity_factor,
+                                 pod_axis=pod_axis)
     return from_owner_layout(y_sh, n_bins, n_dev), dropped
+
+
+# ---------------------------------------------------------------------------
+# iterative graph apps: owner-routed rounds under lax.while_loop/fori_loop
+# ---------------------------------------------------------------------------
+
+def _pack_edges(rows, cols, wts, n_dev, seed=0):
+    """Partition edges by src-vertex owner (device-major flat arrays).
+
+    Returns (src_slot, dst, w, E_max): each [n_dev * E_max]; padding edges
+    carry dst = -1 (owner_route treats them as no-task). Edges are shuffled
+    within each device so owner buckets fill uniformly.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(rows))
+    rows, cols, wts = rows[perm], cols[perm], wts[perm]
+    own = (rows % n_dev).astype(np.int64)
+    counts = np.bincount(own, minlength=n_dev)
+    E_max = max(8, int(counts.max()))
+    src_slot = np.zeros((n_dev, E_max), np.int32)
+    dst = np.full((n_dev, E_max), -1, np.int32)
+    w = np.zeros((n_dev, E_max), np.float32)
+    for d in range(n_dev):
+        sel = own == d
+        k = int(counts[d])
+        src_slot[d, :k] = (rows[sel] // n_dev).astype(np.int32)
+        dst[d, :k] = cols[sel].astype(np.int32)
+        w[d, :k] = wts[sel]
+    return (jnp.asarray(src_slot.reshape(-1)), jnp.asarray(dst.reshape(-1)),
+            jnp.asarray(w.reshape(-1)), E_max)
+
+
+def _graph_setup(g: CSR, mesh, undirected=False, seed=0):
+    n_dev = mesh.devices.size
+    rows, cols, wts = g.row_of(), g.col_idx.astype(np.int64), g.values
+    if undirected:
+        rows, cols = np.concatenate([rows, cols]), np.concatenate([cols, rows])
+        wts = np.concatenate([wts, wts])
+    src_slot, dst, w, E_max = _pack_edges(rows, cols, wts, n_dev, seed)
+    n_local = -(-g.n // n_dev)
+    return n_dev, n_local, src_slot, dst, w, E_max
+
+
+def _frontier_min_app(g: CSR, mesh, dist0_np, *, value, axis="data",
+                      capacity_factor: float = 4.0, max_rounds: int = 128,
+                      undirected: bool = False, seed: int = 0):
+    """Shared driver for BFS / SSSP / WCC: frontier-driven scatter-min
+    rounds inside ONE lax.while_loop under shard_map.
+
+    ``value`` chooses the per-edge task payload: 'hops' (dist+1), 'weight'
+    (dist+w), or 'label' (dist itself).
+    """
+    n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(
+        g, mesh, undirected=undirected, seed=seed)
+    cap = round8(int(E_max * capacity_factor / n_dev))
+    dist0, _ = _owner_pack_np(dist0_np.astype(np.float64), n_dev, np.inf)
+    dist0 = jnp.asarray(dist0, jnp.float32)
+
+    def kernel(src_slot_b, dst_b, w_b, dist_b):
+        owner = jnp.maximum(dst_b, 0) % n_dev
+        slot = jnp.maximum(dst_b, 0) // n_dev
+        evalid = dst_b >= 0
+
+        def cond(state):
+            _, _, r, _, _, changed = state
+            return changed & (r < max_rounds)
+
+        def body(state):
+            dist, frontier, r, msgs, drops, _ = state
+            active = frontier[src_slot_b] & evalid
+            base = dist[src_slot_b]
+            if value == "hops":
+                vals = base + 1.0
+            elif value == "weight":
+                vals = base + w_b
+            else:                                   # 'label'
+                vals = base
+            m = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axis)
+            recv_slot, recv_val, nd = owner_route(
+                vals, slot, owner, active, n_dev, cap, axis)
+            upd = reduce_received(recv_slot, recv_val, n_local, "min")
+            new_dist = jnp.minimum(dist, upd)
+            frontier2 = new_dist < dist
+            changed = jax.lax.psum(
+                jnp.sum(frontier2.astype(jnp.int32)), axis) > 0
+            msgs = msgs.at[r].set(m)
+            drops = drops.at[r].set(
+                jax.lax.psum(nd.astype(jnp.int32), axis))
+            return (new_dist, frontier2, r + 1, msgs, drops, changed)
+
+        zeros = jnp.zeros((max_rounds,), jnp.int32)
+        state = (dist_b, jnp.isfinite(dist_b) if value != "label"
+                 else jnp.ones_like(dist_b, bool),
+                 jnp.int32(0), zeros, zeros, jnp.bool_(True))
+        dist, _, r, msgs, drops, _ = jax.lax.while_loop(cond, body, state)
+        return dist, r, msgs, drops
+
+    spec = P(axis)
+    dist, r, msgs, drops = shard_map_unchecked(
+        kernel, mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, P(), P(), P()))(src_slot, dst, w, dist0)
+    dist_np = np.asarray(from_owner_layout(dist, g.n, n_dev))
+    return dist_np, _collect_stats(r, msgs, drops)
+
+
+def dcra_bfs(g: CSR, root: int, mesh, axis="data",
+             capacity_factor: float = 4.0, max_rounds: int = 128,
+             seed: int = 0) -> Tuple[np.ndarray, AppStats]:
+    """Distributed BFS: hop count from root, -1 if unreachable."""
+    dist0 = np.full(g.n, np.inf)
+    dist0[root] = 0.0
+    d, stats = _frontier_min_app(g, mesh, dist0, value="hops", axis=axis,
+                                 capacity_factor=capacity_factor,
+                                 max_rounds=max_rounds, seed=seed)
+    return np.where(np.isfinite(d), d, -1).astype(np.int64), stats
+
+
+def dcra_sssp(g: CSR, root: int, mesh, axis="data",
+              capacity_factor: float = 4.0, max_rounds: int = 256,
+              seed: int = 0) -> Tuple[np.ndarray, AppStats]:
+    """Distributed SSSP (frontier Bellman-Ford): inf if unreachable."""
+    dist0 = np.full(g.n, np.inf)
+    dist0[root] = 0.0
+    d, stats = _frontier_min_app(g, mesh, dist0, value="weight", axis=axis,
+                                 capacity_factor=capacity_factor,
+                                 max_rounds=max_rounds, seed=seed)
+    return d.astype(np.float64), stats
+
+
+def dcra_wcc(g: CSR, mesh, axis="data", capacity_factor: float = 4.0,
+             max_rounds: int = 128, seed: int = 0
+             ) -> Tuple[np.ndarray, AppStats]:
+    """Distributed WCC via min-label propagation over both edge directions."""
+    if g.n > (1 << 24):
+        # labels ride the f32 NoC payload; ids above 2^24 would collide
+        raise ValueError(f"dcra_wcc supports up to 2^24 vertices, got {g.n}")
+    label0 = np.arange(g.n, dtype=np.float64)
+    lab, stats = _frontier_min_app(g, mesh, label0, value="label", axis=axis,
+                                   capacity_factor=capacity_factor,
+                                   max_rounds=max_rounds, undirected=True,
+                                   seed=seed)
+    return lab.astype(np.int64), stats
+
+
+def dcra_pagerank(g: CSR, mesh, damping: float = 0.85, iters: int = 20,
+                  axis="data", capacity_factor: float = 4.0, seed: int = 0
+                  ) -> Tuple[np.ndarray, AppStats]:
+    """Distributed PageRank: ``iters`` owner-routed epochs (fori_loop),
+    dangling mass redistributed uniformly each epoch (matches the oracle)."""
+    n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(g, mesh, seed=seed)
+    cap = round8(int(E_max * capacity_factor / n_dev))
+    n = g.n
+    deg, vvalid = _owner_pack_np(g.degrees().astype(np.float64), n_dev, 0.0)
+    deg = jnp.asarray(deg, jnp.float32)
+    vvalid = jnp.asarray(vvalid)
+    rank0 = jnp.where(vvalid, jnp.float32(1.0 / n), 0.0)
+
+    def kernel(src_slot_b, dst_b, deg_b, vvalid_b, rank_b):
+        owner = jnp.maximum(dst_b, 0) % n_dev
+        slot = jnp.maximum(dst_b, 0) // n_dev
+        evalid = dst_b >= 0
+        inv_n = jnp.float32(1.0 / n)
+
+        def body(i, state):
+            rank, msgs, drops = state
+            contrib = jnp.where(deg_b > 0, rank / jnp.maximum(deg_b, 1.0),
+                                0.0)
+            vals = contrib[src_slot_b]
+            m = jax.lax.psum(jnp.sum(evalid.astype(jnp.int32)), axis)
+            recv_slot, recv_val, nd = owner_route(
+                vals, slot, owner, evalid, n_dev, cap, axis)
+            acc = reduce_received(recv_slot, recv_val, n_local, "add")
+            dangling = jax.lax.psum(
+                jnp.sum(jnp.where(vvalid_b & (deg_b == 0), rank, 0.0)), axis)
+            rank2 = jnp.where(
+                vvalid_b,
+                (1.0 - damping) * inv_n + damping * (acc + dangling * inv_n),
+                0.0)
+            return (rank2, msgs.at[i].set(m),
+                    drops.at[i].set(jax.lax.psum(nd.astype(jnp.int32),
+                                                 axis)))
+
+        zeros = jnp.zeros((iters,), jnp.int32)
+        rank, msgs, drops = jax.lax.fori_loop(0, iters, body,
+                                              (rank_b, zeros, zeros))
+        return rank, msgs, drops
+
+    spec = P(axis)
+    rank, msgs, drops = shard_map_unchecked(
+        kernel, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec),
+        out_specs=(spec, P(), P()))(src_slot, dst, deg, vvalid, rank0)
+    rank_np = np.asarray(from_owner_layout(rank, g.n, n_dev),
+                         dtype=np.float64)
+    return rank_np, _collect_stats(iters, msgs, drops)

@@ -1,0 +1,138 @@
+"""Optional-import shim for ``hypothesis``.
+
+The property-based tier prefers real hypothesis (shrinking, example DB,
+fuzzing budget control). On boxes without it — the pinned CI image only
+bakes the jax toolchain — we fall back to a *seeded-examples* stub: each
+``@given`` test runs ``max_examples`` deterministic draws from a PCG64
+stream keyed on the test name, so the tier stays meaningful (and green)
+either way.
+
+Importing this module guarantees ``import hypothesis`` works afterwards;
+``tests/conftest.py`` imports it before collection so test modules can keep
+the plain ``from hypothesis import given, settings, strategies as st``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+try:                                       # real hypothesis wins when present
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if not HAVE_HYPOTHESIS:
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A seeded value generator standing in for a hypothesis strategy."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_for(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred, _tries=64):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+            return _Strategy(draw)
+
+    def integers(min_value=0, max_value=2**31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elem.example_for(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    def tuples(*elems):
+        return _Strategy(
+            lambda rng: tuple(e.example_for(rng) for e in elems))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies_kw):
+        def deco(fn):
+            n_examples = getattr(fn, "_compat_max_examples",
+                                 _DEFAULT_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # Deterministic per-test stream: same draws every run.
+                seed = np.frombuffer(
+                    fn.__qualname__.encode(), dtype=np.uint8).sum()
+                rng = np.random.default_rng(int(seed))
+                n = getattr(runner, "_compat_max_examples", n_examples)
+                for i in range(n):
+                    drawn = {k: s.example_for(rng)
+                             for k, s in strategies_kw.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i}: {drawn!r}") from e
+            # settings() may be applied after given() in the decorator stack
+            runner._compat_max_examples = n_examples
+            # Hide strategy-drawn params from pytest's fixture resolution:
+            # it must see only the remaining (fixture) parameters.
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies_kw]
+            runner.__signature__ = sig.replace(parameters=params)
+            del runner.__wrapped__
+            return runner
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.sampled_from = sampled_from
+    _st.floats = floats
+    _st.booleans = booleans
+    _st.just = just
+    _st.lists = lists
+    _st.tuples = tuples
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None,
+                                             data_too_large=None,
+                                             filter_too_much=None)
+    _hyp.__is_compat_stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

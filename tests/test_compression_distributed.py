@@ -14,12 +14,11 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.core.compat import make_mesh, set_mesh, shard_map_unchecked
 from repro.optim.adamw import AdamW
 from repro.optim.compression import compress_psum, init_ef, EFState
 
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
-shard_map = jax.shard_map
+mesh = make_mesh((8,), ('data',))
 
 # toy regression: y = X w*, grads sharded over data
 rng = np.random.default_rng(0)
@@ -41,10 +40,10 @@ def make_step(compress):
                                         ('data',))
                 return gs['g'], ef2.residual['g']
             return jax.lax.pmean(g, 'data'), ef_res
-        g, new_ef = shard_map(
+        g, new_ef = shard_map_unchecked(
             shard_fn2, mesh=mesh,
             in_specs=(P(), P(), P('data'), P('data')),
-            out_specs=(P(), P()), check_vma=False)(w, ef, X, y)
+            out_specs=(P(), P()))(w, ef, X, y)
         w2, opt_state2 = opt.update({'w': g}, opt_state, {'w': w})
         return w2['w'], opt_state2, new_ef
     return jax.jit(step)
@@ -55,7 +54,7 @@ for compress in (False, True):
     state = opt.init({'w': w})
     ef = jnp.zeros(16)
     step = make_step(compress)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(150):
             w, state, ef = step(w, state, ef, X, y)
     results['compressed' if compress else 'exact'] = float(

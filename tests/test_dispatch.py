@@ -16,6 +16,7 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import json, dataclasses
 import jax, jax.numpy as jnp
 from repro.configs import get_config
+from repro.core.compat import make_mesh, set_mesh
 from repro.core.dispatch import MeshInfo, moe_dcra
 from repro.models.moe import init_moe, moe_einsum
 
@@ -32,27 +33,25 @@ params8 = init_moe(jax.random.key(2), cfg8)
 out_e8, _ = moe_einsum(params8, x, cfg8)
 
 res = {}
-mesh = jax.make_mesh((2, 2, 2), ('data', 'expert', 'tp'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ('data', 'expert', 'tp'))
 info = MeshInfo(mesh, pod_axis=None)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out_d, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg, info))(params, x)
 res['single_pod_fused'] = float(jnp.max(jnp.abs(out_d - out_e)))
 
 info_tp = MeshInfo(mesh, pod_axis=None, fuse_tp=False)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out_t, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg, info_tp))(params, x)
 res['tp_ffn'] = float(jnp.max(jnp.abs(out_t - out_e)))
 
-mesh2 = jax.make_mesh((2, 1, 2, 2), ('pod', 'data', 'expert', 'tp'),
-                      axis_types=(jax.sharding.AxisType.Auto,)*4)
+mesh2 = make_mesh((2, 1, 2, 2), ('pod', 'data', 'expert', 'tp'))
 info2 = MeshInfo(mesh2, pod_axis='pod')
 assert info2.dispatch_plan(8)[1] is True   # spans pods (hierarchical)
-with jax.set_mesh(mesh2):
+with set_mesh(mesh2):
     out_h, _ = jax.jit(lambda p, x: moe_dcra(p, x, cfg8, info2))(params8, x)
 res['hierarchical'] = float(jnp.max(jnp.abs(out_h - out_e8)))
 
-with jax.set_mesh(mesh2):
+with set_mesh(mesh2):
     g = jax.jit(jax.grad(lambda p, x: moe_dcra(p, x, cfg8, info2)[0].sum()))(
         params8, x)
 res['grads_finite'] = all(bool(jnp.isfinite(v).all())

@@ -46,15 +46,15 @@ import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import json
 import jax, numpy as np
+from repro.core.compat import make_mesh, set_mesh
 from repro.sparse import datasets, ref
 from repro.sparse.jax_apps import dcra_histogram, dcra_spmv
 
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('data',))
 g = datasets.rmat(9, edge_factor=8, seed=3)
 x = np.random.default_rng(0).random(g.n)
 res = {}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, dropped = dcra_spmv(g, x, mesh)
     res['spmv_err'] = float(np.max(np.abs(np.asarray(y) - ref.spmv_ref(g, x))))
     res['spmv_dropped'] = int(dropped)

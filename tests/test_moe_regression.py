@@ -1,0 +1,110 @@
+"""Refactor-regression guard for the owner-routed MoE dispatch.
+
+Golden fingerprints of seeded ``moe_dcra`` outputs were captured BEFORE the
+routing machinery was extracted into :mod:`repro.core.routing`; this test
+pins the refactored dispatch to those values at fp32 tolerance, for every
+packaging the dispatch plan can pick: single-pod fused-tp, single-pod with a
+tp-sharded FFN (partial-F psum), and the multi-pod hierarchical two-stage
+path.
+
+Regenerate (only when the *semantics* intentionally change)::
+
+    PYTHONPATH=src python tests/test_moe_regression.py --regen
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "moe_dispatch.json")
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json, dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core.compat import make_mesh, set_mesh
+from repro.core.dispatch import MeshInfo, moe_dcra
+from repro.models.moe import init_moe
+
+def fingerprint(out):
+    f = jnp.ravel(out).astype(jnp.float32)
+    step = max(1, f.shape[0] // 256)
+    return {
+        'sample': [float(v) for v in f[::step][:256]],
+        'sum': float(f.sum()),
+        'abs_sum': float(jnp.abs(f).sum()),
+        'shape': list(out.shape),
+    }
+
+cfg = get_config('olmoe-1b-7b').reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=8.0))
+cfg8 = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, num_experts=8, capacity_factor=8.0))
+params = init_moe(jax.random.key(0), cfg)
+params8 = init_moe(jax.random.key(2), cfg8)
+x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model))
+
+res = {}
+mesh = make_mesh((2, 2, 2), ('data', 'expert', 'tp'))
+with set_mesh(mesh):
+    out, _ = jax.jit(lambda p, x: moe_dcra(
+        p, x, cfg, MeshInfo(mesh, pod_axis=None)))(params, x)
+    res['single_pod_fused'] = fingerprint(out)
+    out, _ = jax.jit(lambda p, x: moe_dcra(
+        p, x, cfg, MeshInfo(mesh, pod_axis=None, fuse_tp=False)))(params, x)
+    res['tp_sharded_ffn'] = fingerprint(out)
+
+mesh2 = make_mesh((2, 1, 2, 2), ('pod', 'data', 'expert', 'tp'))
+with set_mesh(mesh2):
+    out, _ = jax.jit(lambda p, x: moe_dcra(
+        p, x, cfg8, MeshInfo(mesh2, pod_axis='pod')))(params8, x)
+    res['multi_pod_hier'] = fingerprint(out)
+print('RESULT ' + json.dumps(res))
+"""
+
+
+def _run_current():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.fixture(scope="module")
+def current():
+    return _run_current()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", ["single_pod_fused", "tp_sharded_ffn",
+                                  "multi_pod_hier"])
+def test_matches_pre_refactor_golden(current, golden, case):
+    got, want = current[case], golden[case]
+    assert got["shape"] == want["shape"]
+    assert np.allclose(got["sample"], want["sample"], rtol=1e-5, atol=1e-5), \
+        np.max(np.abs(np.array(got["sample"]) - np.array(want["sample"])))
+    assert abs(got["sum"] - want["sum"]) <= 1e-4 * max(1.0, want["abs_sum"])
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        res = _run_current()
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {GOLDEN}")

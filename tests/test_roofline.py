@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import SHAPES
+from repro.core.compat import cost_analysis
 from repro.launch.analytic import forward_flops, step_cost
 from repro.launch.roofline import _shape_bytes, collective_bytes
 
@@ -36,12 +37,12 @@ def test_xla_cost_analysis_counts_scan_once():
     (EXPERIMENTS.md §Dry-run): scan bodies are costed once."""
     a = jnp.zeros((128, 128))
     single = jax.jit(lambda a: a @ a).lower(a).compile()
-    f1 = single.cost_analysis()["flops"]
+    f1 = cost_analysis(single)["flops"]
 
     def scanned(a):
         x, _ = jax.lax.scan(lambda x, _: (x @ a, None), a, None, length=10)
         return x
-    f10 = jax.jit(scanned).lower(a).compile().cost_analysis()["flops"]
+    f10 = cost_analysis(jax.jit(scanned).lower(a).compile())["flops"]
     assert f10 == pytest.approx(f1, rel=0.01)   # NOT 10x
 
 
