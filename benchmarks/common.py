@@ -1,100 +1,23 @@
 """Shared benchmark machinery: run the six apps on a DCRA config, report
 TEPS / TEPS-per-watt / TEPS-per-dollar (paper §V metrics).
 
+The evaluation primitives (``evaluate`` / ``config_cost`` / ``run_app`` /
+``load_datasets``) live in :mod:`repro.dse.evaluate` — the DSE engine and
+the figure benchmarks share one analytic code path; this module keeps the
+figure-presentation helpers (sweeps over named configs, geomean
+improvement tables, CSV emission).
+
 Datasets are scale-reduced stand-ins (CI box) with the paper's *names*
 retained; trends, not absolute TEPS, are the reproduction target (the
 absolute numbers need the cycle-accurate Dalorex simulator — DESIGN.md §2).
 """
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core import EngineConfig, TaskEngine, TileGrid
-from repro.core.cache import DRAMConfig, SRAMConfig
-from repro.core.queues import QueueConfig
-from repro.costmodel import (dcra_die_area_mm2, package_cost, run_energy,
-                             run_perf)
-from repro.sparse import apps, datasets
-
-APPS = ("sssp", "pagerank", "bfs", "wcc", "spmv", "histogram")
-
-
-def load_datasets(scale: int = 12) -> Dict[str, object]:
-    return {
-        f"R{scale}": datasets.rmat(scale, edge_factor=16, seed=1),
-        "WK": datasets.wiki_like(1 << (scale - 1), avg_degree=25),
-    }
-
-
-def run_app(app: str, engine: TaskEngine, g, rng_seed: int = 0):
-    if app == "bfs":
-        return apps.bfs(engine, g, root=0)
-    if app == "sssp":
-        return apps.sssp(engine, g, root=0)
-    if app == "pagerank":
-        return apps.pagerank(engine, g, iters=5)
-    if app == "wcc":
-        return apps.wcc(engine, g)
-    if app == "spmv":
-        x = np.random.default_rng(rng_seed).random(g.n)
-        return apps.spmv(engine, g, x)
-    if app == "histogram":
-        els = datasets.histogram_data(g.nnz, max(g.n // 16, 64))
-        return apps.histogram(engine, els, max(g.n // 16, 64))
-    raise ValueError(app)
-
-
-@dataclass
-class ConfigResult:
-    teps: float
-    teps_per_watt: float
-    teps_per_dollar: float
-    seconds: float
-    energy_j: float
-    cost_usd: float
-    hops: int
-    breakdown: object = None
-
-
-def evaluate(cfg: EngineConfig, g, app: str,
-             cost_usd: Optional[float] = None) -> ConfigResult:
-    engine = TaskEngine(cfg, getattr(g, "n", len(np.atleast_1d(g))))
-    _, stats = run_app(app, engine, g)
-    edges = g.nnz if hasattr(g, "nnz") else len(g)
-    dbytes = g.memory_bytes() if hasattr(g, "memory_bytes") else edges * 8
-    fanout = edges / max(getattr(g, "n", 1), 1)
-    perf = run_perf(stats, cfg, edges, dataset_bytes=dbytes, fanout=fanout)
-    en = run_energy(stats, cfg, dataset_bytes=dbytes)
-    if cost_usd is None:
-        cost_usd = config_cost(cfg)
-    watts = en.total_j / max(perf.seconds, 1e-12)
-    return ConfigResult(
-        teps=perf.teps,
-        teps_per_watt=perf.teps / max(watts, 1e-12),
-        teps_per_dollar=perf.teps / max(cost_usd, 1e-12),
-        seconds=perf.seconds, energy_j=en.total_j, cost_usd=cost_usd,
-        hops=stats.total_hops, breakdown=en)
-
-
-def config_cost(cfg: EngineConfig) -> float:
-    g = cfg.grid
-    tiles_per_die = g.die_rows * g.die_cols
-    n_dies = max(1, g.n_tiles // tiles_per_die)
-    area = dcra_die_area_mm2(tiles_per_die, cfg.sram.kb_per_tile,
-                             cfg.pus_per_tile, g.noc_width_bits,
-                             g.noc_freq_ghz)
-    hbm_gb = cfg.dram.gb_per_die * n_dies if cfg.dram.present else 0.0
-    return package_cost(n_dies, area, hbm_gb).total
-
-
-def geomean(vals: List[float]) -> float:
-    vals = [max(v, 1e-12) for v in vals]
-    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+from repro.core.task_engine import EngineConfig
+from repro.dse.evaluate import (APPS, ConfigResult, config_cost,  # noqa: F401
+                                evaluate, geomean, load_datasets, run_app)
 
 
 def sweep(configs: Dict[str, EngineConfig], data: Dict[str, object],

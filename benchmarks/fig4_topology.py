@@ -1,30 +1,38 @@
 """Paper Fig. 4: NoC topology/width/frequency sweep on 64x64 tiles.
 
+Configs are :class:`repro.dse.space.DesignPoint`\\ s — figure reproduction
+and the DSE sweep share one code path; this figure is the named
+compile-time/pre-silicon slice of the space (topology × link width ×
+NoC frequency at a fixed 64×64 deployment).
+
 Expected trends: mesh width 2x -> ~2x perf; torus ~2.6x geomean over 32-bit
 mesh (up to ~8x for SPMV); hierarchical torus adds ~+9% perf and ~+19%
 energy efficiency; 2GHz NoC adds little perf (~3%) at 3x cost.
 """
 from __future__ import annotations
 
-from repro.core import EngineConfig, TileGrid
+from repro.dse.space import DesignPoint
 
 from .common import emit, improvements, load_datasets, sweep
 
-ROWS = COLS = 64
+SIDE = 64
 DIE = 16  # 16 chiplets of 16x16 tiles (paper: 16 chiplets of 32x32)
+
+BASE = DesignPoint(grid_side=SIDE, die_side=DIE, mem_tech="hbm",
+                   dies_per_package=16)
+
+POINTS = {
+    "mesh32": BASE.with_(topology="mesh", noc_width_bits=32),
+    "mesh64": BASE.with_(topology="mesh", noc_width_bits=64),
+    "torus64": BASE.with_(topology="torus", noc_width_bits=64),
+    "hier64": BASE.with_(topology="hier_torus", noc_width_bits=64),
+    "hier64_2ghz": BASE.with_(topology="hier_torus", noc_width_bits=64,
+                              noc_freq_ghz=2.0),
+}
 
 
 def configs():
-    def grid(topo, width=64, freq=1.0):
-        return TileGrid(ROWS, COLS, topology=topo, die_rows=DIE, die_cols=DIE,
-                        noc_width_bits=width, noc_freq_ghz=freq)
-    return {
-        "mesh32": EngineConfig(grid=grid("mesh", 32)),
-        "mesh64": EngineConfig(grid=grid("mesh", 64)),
-        "torus64": EngineConfig(grid=grid("torus", 64)),
-        "hier64": EngineConfig(grid=grid("hier_torus", 64)),
-        "hier64_2ghz": EngineConfig(grid=grid("hier_torus", 64, 2.0)),
-    }
+    return {name: p.engine_config() for name, p in POINTS.items()}
 
 
 def main(scale: int = 16):

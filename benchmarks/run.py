@@ -39,14 +39,19 @@ def main() -> None:
              "--scale", str(min(scale, 11))], check=True)),
         ("roofline_table", roofline_table.main),
     ]
+    failures = []
     for name, fn in figs:
         t = time.time()
         print(f"== {name} ==", flush=True)
         try:
             fn()
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # keep the suite running, but gate at exit
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            failures.append(name)
         print(f"# {name} took {time.time() - t:.1f}s", flush=True)
+    if failures:
+        print(f"FAILED figures: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -80,12 +80,16 @@ class RunStats:
 class TaskEngine:
     """Owner-computes execution over a virtual tile grid."""
 
-    def __init__(self, config: EngineConfig, n_items: int):
+    def __init__(self, config: EngineConfig, n_items: int,
+                 iq_capacity: Optional[int] = None):
         self.cfg = config
         self.n = n_items                       # global index space (vertices)
         self.T = config.grid.n_tiles
         self.cache = CacheModel(config.sram, config.dram)
         self.stats = RunStats()
+        # default bounded-IQ model for every route() call (the DSE sweep's
+        # compile-time queue axis); None keeps the legacy unbounded stats.
+        self.iq_capacity = iq_capacity
 
     # ---- PGAS layout -----------------------------------------------------
     def owner(self, idx: np.ndarray) -> np.ndarray:
@@ -117,6 +121,8 @@ class TaskEngine:
         equals the real drop count of the shard_map path for the same task
         stream (property-tested in tests/test_routing.py).
         """
+        if iq_capacity is None:
+            iq_capacity = self.iq_capacity
         g = self.cfg.grid
         src_t = self.owner(np.asarray(src_idx))
         dst_t = self.owner(np.asarray(dst_idx))
@@ -159,6 +165,8 @@ class TaskEngine:
     @staticmethod
     def _reduce(dst_idx, values, target, op):
         dst_idx = np.asarray(dst_idx)
+        if dst_idx.size == 0:      # empty round (e.g. frontier of leaves)
+            return
         if op == "add":
             upd = np.bincount(dst_idx, weights=values.astype(np.float64),
                               minlength=target.shape[0])

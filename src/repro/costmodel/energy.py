@@ -37,12 +37,16 @@ def run_energy(stats: RunStats, cfg: EngineConfig,
     for r in stats.rounds:
         bits = r.payload_bytes * 8
         if r.messages:
+            # dropped tasks are retransmitted (see perf.py): the retried
+            # wire traffic burns NoC energy again; same all-channel
+            # normalisation as perf.py's retry factor
+            retry = 1.0 + r.drops / max(r.messages + r.local_msgs, 1)
             avg_hops = r.hops / r.messages
             per_msg_bits = bits / r.messages
-            noc += r.messages * per_msg_bits * (
+            noc += r.messages * retry * per_msg_bits * (
                 avg_hops * (LINK.noc_router_pj_bit
                             + LINK.noc_wire_pj_bit_mm * LINK.tile_pitch_mm))
-            noc += r.die_crossings * per_msg_bits * LINK.d2d_pj_bit
+            noc += r.die_crossings * retry * per_msg_bits * LINK.d2d_pj_bit
         # memory: stream + random access mix
         hit = cache.hit_rate(r.stream_bytes, r.random_bytes, foot_tile)
         total_bits = (r.stream_bytes + r.random_bytes) * 8

@@ -61,9 +61,15 @@ def round_time_ns(r, cfg: EngineConfig, cache: CacheModel,
     compute_ns = eff_tasks * per_task_ns / cfg.pus_per_tile
 
     # ---- network -------------------------------------------------------
+    # IQ-overflow drops are retransmitted by the producer (the routing
+    # layer's drop-and-retry semantics), so modeled drops inflate the
+    # injection and bisection terms; zero drops leaves them untouched.
+    # Drops are counted over ALL (src, dst) channels — local ones too —
+    # so normalise by all routed tasks, not just the NoC-crossing ones.
+    retry = 1.0 + r.drops / max(r.messages + r.local_msgs, 1)
     inj_hot = avg_tasks + w * max(r.tasks_per_tile_peak - avg_tasks, 0.0)
-    inj_ns = inj_hot * MSG_BITS / (g.noc_width_bits * f_noc)
-    remote_bytes = r.payload_bytes
+    inj_ns = inj_hot * retry * MSG_BITS / (g.noc_width_bits * f_noc)
+    remote_bytes = r.payload_bytes * retry
     bisec = g.bisection_bytes_per_cycle() * f_noc * CONGESTION[g.topology]
     # hierarchical torus: the die-NoC carries inter-die traffic in parallel
     if g.topology == "hier_torus":

@@ -1,0 +1,28 @@
+"""Design-space exploration engine (paper §V–§VI).
+
+The paper's central claim is a *framework*: sweep pre-silicon (die grid,
+NoC width/frequency), package-time (dies + memory tech per package) and
+compile-time (topology, deployment grid, queue sizing) configurations,
+evaluate each point through the analytic stack (task engine → perf →
+energy → silicon cost), and pick Pareto-optimal deployments per
+application. This package composes the ingredients the rest of the repo
+already has into that loop:
+
+* :mod:`repro.dse.space`     — declarative ``ConfigSpace`` / ``DesignPoint``
+  over the three configuration axes;
+* :mod:`repro.dse.evaluate`  — ``Evaluator``: analytic evaluation of a point
+  for the six paper apps × bundled datasets (stats cached across points that
+  share the simulation-relevant sub-key, the paper's decoupled re-pricing);
+* :mod:`repro.dse.pareto`    — n-dimensional Pareto frontier extraction;
+* :mod:`repro.dse.driver`    — generic resumable sweep driver (also the
+  engine behind ``launch/dryrun.py`` and ``launch/hillclimb.py``);
+* :mod:`repro.dse.shardcheck`— subprocess worker re-validating analytic
+  message/drop counts on the real ``shard_map`` executables;
+* :mod:`repro.dse.sweep`     — ``python -m repro.dse.sweep`` CLI emitting
+  the tracked ``BENCH_dse.json`` perf trajectory.
+"""
+from .evaluate import (APPS, ConfigResult, Evaluator, PointResult,  # noqa: F401
+                       config_cost, evaluate, geomean, load_datasets,
+                       run_app)
+from .pareto import dominates, pareto_frontier, pareto_indices  # noqa: F401
+from .space import MEM_TECHS, ConfigSpace, DesignPoint          # noqa: F401

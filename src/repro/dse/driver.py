@@ -1,0 +1,83 @@
+"""Generic resumable sweep driver.
+
+One loop, three clients: the DSE sweep CLI, the dry-run lowering grid
+(``launch/dryrun.py``) and the perf hill-climber (``launch/hillclimb.py``)
+all iterate "evaluate a config point, record a dict, skip what's done,
+never let one failure kill the sweep". This module owns that loop:
+
+* each unit of work is a :class:`SweepTask` — a dedup ``key``, a ``run``
+  thunk returning the result record, and static ``meta`` merged into the
+  record (also the error record, so failures stay attributable);
+* :func:`run_sweep` resumes from an existing JSON list (``key_of`` maps
+  previously-written records back to task keys), appends one record per
+  task, and rewrites the file after every task so a crash loses at most
+  the in-flight point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import traceback
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+
+@dataclass
+class SweepTask:
+    key: str
+    run: Callable[[], Dict]
+    meta: Dict = field(default_factory=dict)
+
+
+def load_results(out: Optional[str]) -> List[Dict]:
+    if out and os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    return []
+
+
+def _write(out: Optional[str], results: List[Dict]) -> None:
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+def run_sweep(tasks: Iterable[SweepTask], out: Optional[str] = None,
+              resume: bool = True,
+              key_of: Optional[Callable[[Dict], Optional[str]]] = None,
+              verbose: bool = True,
+              raise_errors: bool = False) -> List[Dict]:
+    """Run every task not already recorded; returns the full record list.
+
+    ``out=None`` keeps everything in memory (single-shot sweeps that
+    post-process before writing, e.g. the BENCH emitter).
+    """
+    results = load_results(out) if resume else []
+    done = set()
+    if key_of is not None:
+        done = {key_of(r) for r in results}
+    for task in tasks:
+        if task.key in done:
+            continue
+        try:
+            rec = dict(task.run())
+        except Exception as e:  # record and continue — sweeps must finish
+            if raise_errors:
+                raise
+            traceback.print_exc()
+            rec = {"error": f"{type(e).__name__}: {e}"}
+        for k, v in task.meta.items():
+            rec.setdefault(k, v)
+        results.append(rec)
+        done.add(task.key)
+        _write(out, results)
+        if verbose and "error" in rec:
+            print(f"[sweep] {task.key}: ERROR {rec['error']}", flush=True)
+    return results
+
+
+def summarize(results: Sequence[Dict], ok_field: str) -> str:
+    ok = sum(1 for r in results if ok_field in r)
+    skip = sum(1 for r in results if "skipped" in r)
+    err = sum(1 for r in results if "error" in r)
+    return f"{ok} ok, {skip} skipped, {err} errors"

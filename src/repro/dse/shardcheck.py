@@ -1,0 +1,119 @@
+"""Subprocess worker: re-validate analytic winners on the real shard_map
+executables.
+
+The DSE sweep's analytic stack models the bounded input queue of the
+distributed routing layer (:mod:`repro.core.routing`); this worker proves
+the model on a top-K point by routing the *same* task stream through both
+paths at the same parallelism and comparing message / drop counts:
+
+* executable: ``dcra_spmv`` / ``dcra_histogram`` from
+  :mod:`repro.sparse.jax_apps` under ``shard_map`` on ``n_dev`` host
+  devices, with the point's IQ capacity pinned via ``cap=``;
+* analytic: ``TaskEngine.route(iq_capacity=cap)`` on a ``TileGrid(1,
+  n_dev)`` — one tile per shard, so the per-(source shard → owner) channel
+  structure is identical (the property ``tests/test_routing.py`` pins).
+
+Must run in its own process: the fake-device count has to be set before
+jax imports (same pattern as ``benchmarks/noc_routing.py``). Protocol:
+spec JSON on stdin, one ``RESULT <json>`` line on stdout.
+
+Spec::
+
+    {"n_dev": 8, "scale": 8, "seed": 0,
+     "checks": [{"point_id": "...", "iq_capacity": 12,
+                 "apps": ["spmv", "histogram"]}]}
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # must precede any jax import
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json     # noqa: E402
+import sys      # noqa: E402
+
+import numpy as np  # noqa: E402
+
+RESULT_PREFIX = "RESULT "
+
+
+def _analytic_counts(dest: np.ndarray, n: int, n_dev: int, cap: int):
+    """The same stream through the analytic twin at shard parallelism."""
+    from ..core.task_engine import EngineConfig, TaskEngine
+    from ..core.topology import TileGrid
+    engine = TaskEngine(EngineConfig(grid=TileGrid(1, n_dev)), n,
+                        iq_capacity=cap)
+    e_local = len(dest) // n_dev
+    shard_of = np.repeat(np.arange(n_dev), e_local)
+    valid = dest >= 0
+    rs = engine.route("T3", src_idx=shard_of[valid],
+                      dst_idx=dest[valid].astype(np.int64))
+    return rs.tasks_total, rs.drops
+
+
+def check_point(check: dict, n_dev: int, scale: int, seed: int) -> list:
+    import jax.numpy as jnp
+    from ..core.compat import make_mesh
+    from ..sparse import datasets
+    from ..sparse.jax_apps import (dcra_histogram, dcra_scatter, dcra_spmv,
+                                   histogram_task_stream, spmv_task_stream)
+
+    mesh = make_mesh((n_dev,), ("data",))
+    cap = max(1, int(check["iq_capacity"]))  # honored exactly, no rounding
+    g = datasets.rmat(scale, edge_factor=8, seed=1)
+    out = []
+    for app in check.get("apps", ("spmv", "histogram")):
+        if app == "spmv":
+            x = np.random.default_rng(seed).random(g.n)
+            dest, _ = spmv_task_stream(g, x, n_dev, seed)
+            _, dropped = dcra_spmv(g, x, mesh, seed=seed, cap=cap)
+            n_items = g.n
+            # measure delivered-task count END TO END: route unit payloads
+            # through the same collective so kept+dropped is observed at
+            # the owners, not recomputed from the host-side stream
+            ones = np.ones(len(dest), np.float32)
+            y1, drop1 = dcra_scatter(jnp.asarray(dest), jnp.asarray(ones),
+                                     n_items, mesh, "data", op="add",
+                                     cap=cap)
+            kept = int(round(float(np.asarray(y1).sum())))
+            assert int(drop1) == int(dropped)   # same stream, same cap
+        elif app == "histogram":
+            els = datasets.histogram_data(g.nnz, max(g.n // 16, 64),
+                                          seed=seed + 3)
+            n_items = max(g.n // 16, 64)
+            dest, _ = histogram_task_stream(els, n_dev)
+            y, dropped = dcra_histogram(els, n_items, mesh, cap=cap)
+            # the histogram IS a unit-payload scatter: its own output
+            # counts the delivered tasks
+            kept = int(round(float(np.asarray(y).sum())))
+        else:
+            raise ValueError(f"unsupported revalidation app {app!r}")
+        exe_drops = int(dropped)
+        exe_msgs = kept + exe_drops
+        ana_msgs, ana_drops = _analytic_counts(dest, n_items, n_dev, cap)
+        ok = (exe_msgs == ana_msgs) and (exe_drops == ana_drops)
+        out.append({
+            "point_id": check.get("point_id", ""),
+            "app": app, "n_dev": n_dev, "cap": cap,
+            "executable": {"messages": exe_msgs, "drops": exe_drops},
+            "analytic": {"messages": ana_msgs, "drops": ana_drops},
+            "ok": ok,
+        })
+    return out
+
+
+def main() -> int:
+    spec = json.load(sys.stdin)
+    n_dev = int(spec.get("n_dev", 8))
+    scale = int(spec.get("scale", 8))
+    seed = int(spec.get("seed", 0))
+    results = []
+    for check in spec["checks"]:
+        results.extend(check_point(check, n_dev, scale, seed))
+    print(RESULT_PREFIX + json.dumps(results), flush=True)
+    return 0 if all(r["ok"] for r in results) else 3
+
+
+if __name__ == "__main__":
+    sys.exit(main())

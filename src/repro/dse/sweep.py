@@ -1,0 +1,157 @@
+"""``python -m repro.dse.sweep`` — the design-space exploration CLI.
+
+Enumerates a :class:`~repro.dse.space.ConfigSpace`, evaluates every point
+analytically (:class:`~repro.dse.evaluate.Evaluator`), extracts the 3-D
+Pareto frontier over (TEPS↑, watts↓, $/package↓), re-validates the top-K
+analytic winners on the real ``shard_map`` executables (message/drop
+counts must match the analytic model exactly — see
+:mod:`repro.dse.shardcheck`), and emits ``BENCH_dse.json`` — the repo's
+machine-readable perf trajectory, uploaded as a CI artifact by the
+``bench-smoke`` and nightly workflows.
+
+Exit codes: 0 ok; 1 sweep produced no valid points; 3 revalidation
+mismatch (the analytic model diverged from the executables — a gating
+failure, not a soft warning).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.dse.sweep --quick [--out BENCH_dse.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .driver import SweepTask, run_sweep
+from .evaluate import APPS, Evaluator, load_datasets
+from .pareto import DEFAULT_OBJECTIVES, pareto_frontier
+from .shardcheck import RESULT_PREFIX
+from .space import ConfigSpace
+
+SCHEMA = "dcra-dse-bench/v1"
+QUICK_APPS = ("bfs", "pagerank", "spmv", "histogram")
+
+
+def revalidate(results: Sequence[Dict], top_k: int, n_dev: int,
+               scale: int, timeout: float = 900.0) -> List[Dict]:
+    """Re-run the top-K points' queue model on the shard_map executables
+    (subprocess: the fake-device count must be set before jax imports)."""
+    ranked = sorted((r for r in results if r.get("pareto")),
+                    key=lambda r: -r["metrics"]["teps_geomean"])
+    checks = [{"point_id": r["point_id"],
+               "iq_capacity": r["config"]["iq_capacity"],
+               "apps": ["spmv", "histogram"]}
+              for r in ranked[:top_k]]
+    if not checks:
+        return []
+    spec = {"n_dev": n_dev, "scale": scale, "seed": 0, "checks": checks}
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.dse.shardcheck"],
+        input=json.dumps(spec), capture_output=True, text=True,
+        timeout=timeout)
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith(RESULT_PREFIX)]
+    if proc.returncode not in (0, 3) or not lines:
+        raise RuntimeError(
+            f"shardcheck failed (rc={proc.returncode}):\n"
+            f"{proc.stderr[-2000:]}")
+    return json.loads(lines[-1][len(RESULT_PREFIX):])
+
+
+def run(space: ConfigSpace, apps_list: Sequence[str], scale: int,
+        top_k: int, n_dev: int, out: Optional[str],
+        quick: bool, skip_revalidation: bool = False) -> Dict:
+    t0 = time.time()
+    data = load_datasets(scale)
+    ev = Evaluator(data, apps_list)
+    points = list(space.points())
+    print(f"[dse] sweeping {len(points)} points x {len(apps_list)} apps x "
+          f"{len(data)} datasets (scale={scale})", flush=True)
+
+    tasks = [SweepTask(key=p.point_id,
+                       run=(lambda p=p: ev.evaluate_point(p).to_dict()),
+                       meta={"point_id": p.point_id})
+             for p in points]
+    records = run_sweep(tasks, out=None, resume=False)
+    valid = [r for r in records if "metrics" in r]
+
+    frontier = pareto_frontier([r["metrics"] | {"teps": r["metrics"]
+                                                ["teps_geomean"],
+                                                "watts": r["metrics"]
+                                                ["watts_geomean"]}
+                                for r in valid], DEFAULT_OBJECTIVES)
+    frontier_ids = {valid[i]["point_id"] for i in frontier}
+    for r in valid:
+        r["pareto"] = r["point_id"] in frontier_ids
+
+    reval: List[Dict] = []
+    if not skip_revalidation:
+        reval = revalidate(valid, top_k=top_k, n_dev=n_dev,
+                           scale=min(scale, 8))
+
+    bench = {
+        "schema": SCHEMA,
+        "quick": quick,
+        "space": space.to_dict(),
+        "apps": list(apps_list),
+        "datasets": sorted(data),
+        "dataset_scale": scale,
+        "points": records,
+        "pareto": sorted(frontier_ids),
+        "revalidation": reval,
+        "elapsed_s": time.time() - t0,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"[dse] wrote {out}: {len(valid)} points, "
+              f"{len(frontier_ids)} on the frontier, "
+              f"{sum(1 for r in reval if r['ok'])}/{len(reval)} "
+              f"revalidations ok, {bench['elapsed_s']:.1f}s", flush=True)
+    return bench
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized space + small datasets")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="dataset scale (default: 8 quick / 12 full)")
+    ap.add_argument("--out", default="BENCH_dse.json")
+    ap.add_argument("--top-k", type=int, default=2,
+                    help="analytic winners to revalidate on shard_map")
+    ap.add_argument("--n-dev", type=int, default=8)
+    ap.add_argument("--apps", default=None,
+                    help="comma-separated subset of " + ",".join(APPS))
+    ap.add_argument("--skip-revalidation", action="store_true")
+    args = ap.parse_args(argv)
+
+    space = ConfigSpace.quick() if args.quick else ConfigSpace.full()
+    scale = args.scale if args.scale is not None else (8 if args.quick
+                                                      else 12)
+    apps_list = (tuple(args.apps.split(",")) if args.apps
+                 else (QUICK_APPS if args.quick else APPS))
+    bench = run(space, apps_list, scale, args.top_k, args.n_dev,
+                args.out, quick=args.quick,
+                skip_revalidation=args.skip_revalidation)
+
+    valid = [r for r in bench["points"] if "metrics" in r]
+    if not valid or not bench["pareto"]:
+        print("[dse] FAIL: no valid points / empty frontier",
+              file=sys.stderr)
+        return 1
+    if not args.skip_revalidation and (
+            not bench["revalidation"]
+            or not all(r["ok"] for r in bench["revalidation"])):
+        print("[dse] FAIL: shard_map revalidation mismatch "
+              f"{bench['revalidation']}", file=sys.stderr)
+        return 3
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

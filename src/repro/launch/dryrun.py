@@ -15,9 +15,7 @@ Usage:
       [--mesh single|multi|both] [--out PATH]
 """
 import argparse      # noqa: E402
-import json          # noqa: E402
 import time          # noqa: E402
-import traceback     # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -26,6 +24,7 @@ import dataclasses  # noqa: E402
 
 from ..configs import ARCH_IDS, get_config           # noqa: E402
 from ..core.compat import set_mesh as compat_set_mesh   # noqa: E402
+from ..dse.driver import SweepTask, run_sweep, summarize  # noqa: E402
 from ..costmodel.params import (TPU_HBM_BW, TPU_ICI_BW,  # noqa: E402
                                 TPU_PEAK_BF16_FLOPS)
 from ..models.model_zoo import build_model            # noqa: E402
@@ -247,33 +246,20 @@ def main():
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
 
-    results = []
-    if args.append and os.path.exists(args.out):
-        with open(args.out) as f:
-            results = json.load(f)
-    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
-
-    for arch in archs:
-        for shape in shapes:
-            for mp in meshes:
-                key = (arch, shape, "multi" if mp else "single")
-                if key in done:
-                    continue
-                try:
-                    rec = lower_cell(arch, shape, mp)
-                except Exception as e:
-                    traceback.print_exc()
-                    rec = {"arch": arch, "shape": shape,
-                           "mesh": "multi" if mp else "single",
-                           "error": f"{type(e).__name__}: {e}"}
-                results.append(rec)
-                with open(args.out, "w") as f:
-                    json.dump(results, f, indent=1)
-    ok = sum(1 for r in results if "compute_s" in r)
-    skip = sum(1 for r in results if "skipped" in r)
-    err = sum(1 for r in results if "error" in r)
-    print(f"dry-run complete: {ok} compiled, {skip} skipped (documented), "
-          f"{err} errors -> {args.out}")
+    tasks = [
+        SweepTask(
+            key=f"{arch}|{shape}|{'multi' if mp else 'single'}",
+            run=(lambda arch=arch, shape=shape, mp=mp:
+                 lower_cell(arch, shape, mp)),
+            meta={"arch": arch, "shape": shape,
+                  "mesh": "multi" if mp else "single"})
+        for arch in archs for shape in shapes for mp in meshes]
+    results = run_sweep(
+        tasks, out=args.out, resume=args.append,
+        key_of=lambda r: f"{r.get('arch')}|{r.get('shape')}|"
+                         f"{r.get('mesh')}")
+    print(f"dry-run complete: {summarize(results, 'compute_s')} "
+          f"-> {args.out}")
 
 
 if __name__ == "__main__":

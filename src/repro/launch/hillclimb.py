@@ -5,15 +5,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 Each VARIANT is one hypothesis applied to one of the three chosen cells
 (EXPERIMENTS.md §Perf). Results are appended (tagged) to
-dryrun_results.json; the baseline rows keep tag="".
+dryrun_results.json; the baseline rows keep tag="". The sweep loop itself
+(resume, per-variant error capture, incremental JSON writes) is
+:func:`repro.dse.driver.run_sweep` — this module only declares the
+variant list.
 
   PYTHONPATH=src python -m repro.launch.hillclimb [--only CELL]
 """
 import argparse      # noqa: E402
-import json          # noqa: E402
-import traceback     # noqa: E402
 
-from .dryrun import DEFAULT_OUT, lower_cell  # noqa: E402
+from ..dse.driver import SweepTask, run_sweep  # noqa: E402
+from .dryrun import DEFAULT_OUT, lower_cell    # noqa: E402
 
 # (cell, tag, kwargs, hypothesis)
 VARIANTS = [
@@ -95,35 +97,32 @@ VARIANTS = [
 ]
 
 
+def _task(cell_id, cell, tag, kwargs, hypothesis) -> SweepTask:
+    arch, shape, mp = cell
+
+    def run():
+        print(f"== {tag}: {hypothesis}", flush=True)
+        rec = lower_cell(arch, shape, mp, tag=tag, **kwargs)
+        rec["variant_kwargs"] = {k: str(v) for k, v in kwargs.items()}
+        return rec
+
+    return SweepTask(
+        key=tag, run=run,
+        meta={"arch": arch, "shape": shape,
+              "mesh": "multi" if mp else "single", "tag": tag,
+              "hypothesis": hypothesis})
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="cell id A/B/C or tag")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
 
-    with open(args.out) as f:
-        results = json.load(f)
-    done = {r.get("tag") for r in results}
-
-    for cell_id, (arch, shape, mp), tag, kwargs, hypothesis in VARIANTS:
-        if args.only and args.only not in (cell_id, tag):
-            continue
-        if tag in done:
-            continue
-        print(f"== {tag}: {hypothesis}", flush=True)
-        try:
-            rec = lower_cell(arch, shape, mp, tag=tag, **kwargs)
-            rec["hypothesis"] = hypothesis
-            rec["variant_kwargs"] = {k: str(v) for k, v in kwargs.items()}
-        except Exception as e:
-            traceback.print_exc()
-            rec = {"arch": arch, "shape": shape,
-                   "mesh": "multi" if mp else "single", "tag": tag,
-                   "error": f"{type(e).__name__}: {e}",
-                   "hypothesis": hypothesis}
-        results.append(rec)
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=1)
+    tasks = [_task(*variant) for variant in VARIANTS
+             if not args.only or args.only in (variant[0], variant[2])]
+    run_sweep(tasks, out=args.out, resume=True,
+              key_of=lambda r: r.get("tag"))
     print("hillclimb pass done")
 
 

@@ -117,7 +117,8 @@ def _axis_sizes(mesh):
 
 
 def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
-                 capacity_factor: float = 1.5, pod_axis=None):
+                 capacity_factor: float = 1.5, pod_axis=None,
+                 cap: Optional[int] = None):
     """Owner-routed scatter-reduce: one NoC round.
 
     dest/vals: [E] sharded over the device axes (edge-parallel tasks);
@@ -128,14 +129,24 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     ``pod_axis`` selects the hierarchical pod/portal two-stage path
     (paper §III-A): stage 1 aggregates at the per-pod portal over ``axis``
     (tile-NoC), stage 2 crosses pods exactly once (die-NoC).
+
+    ``cap`` pins the per-(source shard → owner) input-queue capacity
+    directly, honored exactly (flat path only — the DSE revalidation
+    sweeps the IQ axis in queue entries, so rounding it would validate a
+    different capacity than the analytic model swept); the default
+    derived from ``capacity_factor`` keeps the lane-aligned round8.
     """
     n_dev = mesh.devices.size
     e_local = dest.shape[0] // n_dev
     n_local = -(-n // n_dev)
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
+    if cap is not None and pod_axis is not None:
+        raise ValueError("explicit cap is only defined for the flat path")
 
     if pod_axis is None:
-        cap = round8(int(e_local * capacity_factor / n_dev))
+        if cap is None:
+            cap = round8(int(e_local * capacity_factor / n_dev))
+        cap = max(1, int(cap))
 
         def kernel(dest_b, vals_b):
             valid = dest_b >= 0                    # padding -> no task
@@ -196,44 +207,67 @@ def _owner_pack_np(arr, n_dev, fill):
     return out, valid
 
 
-def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
-              capacity_factor: float = 2.0, seed: int = 0, pod_axis=None):
-    """Distributed y = A @ x via one owner-routed round.
+def spmv_task_stream(g: CSR, x: np.ndarray, n_dev: int, seed: int = 0
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """The exact flat (dest, value) task stream ``dcra_spmv`` routes.
+
+    Device ``d`` owns the contiguous slice ``[d*e_local, (d+1)*e_local)``;
+    padding tasks carry ``dest = -1`` (no-task). Exposed so the DSE
+    revalidation can feed the *same* stream through the analytic
+    ``TaskEngine.route`` twin and compare message/drop counts exactly.
 
     Edges are shuffled once (host-side): CSR order concentrates a
     high-degree row's edges on one device, overflowing its owner bucket —
     a uniform spread keeps per-owner load near E/(n_dev^2), the same reason
     Dalorex interleaves arrays cyclically.
     """
-    n_dev = mesh.devices.size
     E = g.nnz
     perm = np.random.default_rng(seed).permutation(E)
-    rows = jnp.asarray(g.row_of()[perm])
-    cols = jnp.asarray(g.col_idx[perm])
-    vals = jnp.asarray(g.values[perm])
+    rows = g.row_of()[perm]
+    cols = g.col_idx[perm]
+    vals = g.values[perm].astype(np.float32)
     pad = -(-E // n_dev) * n_dev - E
-    rows_p = jnp.pad(rows, (0, pad), constant_values=-1)
-    cols_p = jnp.pad(cols, (0, pad))
-    vals_p = jnp.pad(vals, (0, pad))
-    vals_eff = jnp.where(jnp.arange(E + pad) < E,
-                         vals_p * jnp.asarray(x, jnp.float32)[cols_p], 0.0)
-    y_sh, dropped = dcra_scatter(rows_p, vals_eff, g.n, mesh, axis,
+    dest = np.concatenate([rows, np.full(pad, -1)]).astype(np.int32)
+    eff = vals * np.asarray(x, np.float32)[cols]
+    vals_eff = np.concatenate([eff, np.zeros(pad, np.float32)])
+    return dest, vals_eff
+
+
+def histogram_task_stream(elements: np.ndarray, n_dev: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """The flat (dest, value) stream ``dcra_histogram`` routes (see
+    :func:`spmv_task_stream` for the sharded-slice convention)."""
+    E = len(elements)
+    pad = -(-E // n_dev) * n_dev - E
+    dest = np.concatenate([np.asarray(elements),
+                           np.full(pad, -1)]).astype(np.int32)
+    vals = np.concatenate([np.ones(E, np.float32),
+                           np.zeros(pad, np.float32)])
+    return dest, vals
+
+
+def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
+              capacity_factor: float = 2.0, seed: int = 0, pod_axis=None,
+              cap: Optional[int] = None):
+    """Distributed y = A @ x via one owner-routed round."""
+    n_dev = mesh.devices.size
+    dest, vals_eff = spmv_task_stream(g, x, n_dev, seed)
+    y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals_eff),
+                                 g.n, mesh, axis,
                                  op="add", capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis)
+                                 pod_axis=pod_axis, cap=cap)
     return from_owner_layout(y_sh, g.n, n_dev), dropped
 
 
 def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
-                   capacity_factor: float = 2.0, pod_axis=None):
+                   capacity_factor: float = 2.0, pod_axis=None,
+                   cap: Optional[int] = None):
     n_dev = mesh.devices.size
-    E = len(elements)
-    pad = -(-E // n_dev) * n_dev - E
-    dest = jnp.pad(jnp.asarray(elements, jnp.int32), (0, pad),
-                   constant_values=-1)
-    ones = jnp.where(jnp.arange(E + pad) < E, 1.0, 0.0)
-    y_sh, dropped = dcra_scatter(dest, ones, n_bins, mesh, axis, op="add",
+    dest, ones = histogram_task_stream(elements, n_dev)
+    y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(ones),
+                                 n_bins, mesh, axis, op="add",
                                  capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis)
+                                 pod_axis=pod_axis, cap=cap)
     return from_owner_layout(y_sh, n_bins, n_dev), dropped
 
 

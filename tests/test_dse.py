@@ -1,0 +1,240 @@
+"""Property tests for the design-space exploration layer
+(:mod:`repro.dse`).
+
+Part A — in-process properties: Pareto frontier invariants, silicon-cost
+monotonicity in die area, ConfigSpace enumeration validity, the
+Evaluator's decoupled re-pricing cache, and the analytic bounded-IQ drop
+count vs an independent per-channel numpy oracle.
+
+Part B — the analytic-vs-executable contract under shard_map (subprocess,
+same pattern as tests/test_routing.py): for swept queue capacities, the
+``repro.dse.shardcheck`` worker must report exact message/drop agreement
+between ``TaskEngine.route`` and the real ``dcra_spmv`` /
+``dcra_histogram`` executables, and the quick sweep CLI must emit a valid
+``BENCH_dse.json`` trajectory end to end.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, TaskEngine, TileGrid
+from repro.costmodel.silicon import die_cost_usd, murphy_yield
+from repro.dse.evaluate import Evaluator
+from repro.dse.pareto import dominates, pareto_frontier, pareto_indices
+from repro.dse.space import ConfigSpace, DesignPoint
+from repro.sparse import datasets
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Part A: Pareto frontier invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([1, 4, 40]),
+       k=st.sampled_from([2, 3]))
+def test_pareto_invariants(seed, n, k):
+    rng = np.random.default_rng(seed)
+    # quantized so duplicates / exact ties actually occur
+    vals = np.round(rng.random((n, k)), 1)
+    idx = pareto_indices(vals)
+    assert 1 <= len(idx) <= n
+    assert set(idx) <= set(range(n))                  # frontier ⊆ input
+    for i in idx:                                     # nothing kept is dominated
+        assert not any(dominates(vals[j], vals[i]) for j in range(n))
+    for i in set(range(n)) - set(idx):                # everything dropped is
+        assert any(dominates(vals[j], vals[i]) for j in idx)
+
+
+def test_pareto_frontier_respects_directions():
+    recs = [
+        {"teps": 1.0, "watts": 1.0, "package_usd": 1.0},  # dominated by #1
+        {"teps": 2.0, "watts": 1.0, "package_usd": 1.0},
+        {"teps": 2.0, "watts": 2.0, "package_usd": 0.5},  # trade-off: kept
+    ]
+    assert pareto_frontier(recs) == [1, 2]
+
+
+def test_pareto_keeps_duplicate_optima():
+    recs = [{"teps": 2.0, "watts": 1.0, "package_usd": 1.0}] * 3
+    assert pareto_frontier(recs) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Part A: silicon economics monotonicity (the DSE cost axis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_yield_and_die_cost_monotone_in_area(seed):
+    rng = np.random.default_rng(seed)
+    areas = np.sort(rng.uniform(5.0, 800.0, 8))
+    ys = [murphy_yield(a, 0.0007) for a in areas]
+    assert all(a >= b - 1e-12 for a, b in zip(ys, ys[1:])), \
+        "murphy_yield must not increase with area"
+    cs = [die_cost_usd(a) for a in areas]
+    assert all(b >= a * (1 - 1e-9) for a, b in zip(cs, cs[1:])), \
+        "die_cost_usd must not decrease with area"
+
+
+# ---------------------------------------------------------------------------
+# Part A: ConfigSpace enumeration
+# ---------------------------------------------------------------------------
+
+def test_quick_space_shape_and_validity():
+    pts = list(ConfigSpace.quick().points())
+    assert len(pts) >= 24
+    assert len({p.point_id for p in pts}) == len(pts)   # ids are unique
+    for p in pts:
+        assert p.grid_side % p.die_side == 0
+        cfg = p.engine_config()
+        assert cfg.grid.topology == p.topology
+        assert cfg.grid.noc_width_bits == p.noc_width_bits
+        assert cfg.queues.iq("T3") == p.iq_capacity
+        assert cfg.queues.oq("T3") == p.oq_capacity
+        assert cfg.dram.present == (p.mem_tech == "hbm")
+        assert p.package_usd() > 0 and p.system_usd() >= p.package_usd()
+
+
+def test_design_point_round_trips_and_rejects_bad_axes():
+    p = next(ConfigSpace.quick().points())
+    assert DesignPoint.from_dict(p.to_dict()) == p
+    with pytest.raises(ValueError):
+        DesignPoint(topology="ring")
+    with pytest.raises(ValueError):
+        DesignPoint(mem_tech="optane")
+
+
+def test_full_space_covers_every_topology_and_mem_tech():
+    pts = list(ConfigSpace.full().points())
+    assert {p.topology for p in pts} == {"mesh", "torus", "hier_torus"}
+    assert {p.mem_tech for p in pts} == {"sram", "hbm"}
+    assert len(pts) >= 24
+
+
+# ---------------------------------------------------------------------------
+# Part A: Evaluator decoupled re-pricing
+# ---------------------------------------------------------------------------
+
+def test_evaluator_reprices_cached_stats_across_width_and_mem():
+    data = {"R6": datasets.rmat(6, edge_factor=4, seed=1)}
+    ev = Evaluator(data, ("bfs", "spmv"))
+    a = DesignPoint(grid_side=16, die_side=16, mem_tech="hbm")
+    b = a.with_(noc_width_bits=32, mem_tech="sram", oq_capacity=48)
+    ra, rb = ev.evaluate_point(a), ev.evaluate_point(b)
+    # same stats_key -> the routed stream is simulated once, re-priced twice
+    assert ev.stats_for(a, "bfs", "R6") is ev.stats_for(b, "bfs", "R6")
+    for r in (ra, rb):
+        assert r.teps > 0 and np.isfinite(r.teps)
+        assert r.watts > 0 and r.system_usd > 0
+    assert ra.system_usd != rb.system_usd      # mem tech re-prices dollars
+
+
+# ---------------------------------------------------------------------------
+# Part A: analytic bounded-IQ drops vs independent channel oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.sampled_from([1, 8, 16]),
+       T=st.sampled_from([2, 4, 8]))
+def test_engine_drop_count_matches_channel_overflow(seed, cap, T):
+    rng = np.random.default_rng(seed)
+    n = 64
+    src = rng.integers(0, n, 300)
+    dst = rng.integers(0, n, 300)
+    engine = TaskEngine(EngineConfig(grid=TileGrid(1, T)), n,
+                        iq_capacity=cap)
+    rs = engine.route("T3", src_idx=src, dst_idx=dst)
+    chan = {}
+    for s, d in zip(src % T, dst % T):
+        chan[(s, d)] = chan.get((s, d), 0) + 1
+    want = sum(max(c - cap, 0) for c in chan.values())
+    assert rs.drops == want
+    # per-call override beats the constructor default
+    rs2 = engine.route("T3", src_idx=src, dst_idx=dst, iq_capacity=10**9)
+    assert rs2.drops == 0
+
+
+# ---------------------------------------------------------------------------
+# Part B: shard_map revalidation across swept queue capacities (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shardcheck_results():
+    spec = {"n_dev": 8, "scale": 8, "seed": 0,
+            "checks": [{"point_id": f"iq{iq}", "iq_capacity": iq,
+                        "apps": ["spmv", "histogram"]}
+                       for iq in (8, 64)]}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.dse.shardcheck"],
+        input=json.dumps(spec), env=_env(),
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_shardcheck_agrees_for_swept_capacities(shardcheck_results):
+    assert len(shardcheck_results) == 4          # 2 caps x 2 apps
+    for r in shardcheck_results:
+        assert r["ok"], r
+        assert r["executable"] == r["analytic"]
+
+
+def test_shardcheck_exercises_the_overflow_path(shardcheck_results):
+    """Tight queues must actually drop, or the agreement is vacuous."""
+    tight = [r for r in shardcheck_results if r["cap"] == 8]
+    assert tight and all(r["analytic"]["drops"] > 0 for r in tight)
+
+
+# ---------------------------------------------------------------------------
+# Part B: the sweep CLI end to end (the BENCH_dse.json contract)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quick_bench():
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "BENCH_dse.json")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.dse.sweep", "--quick",
+             "--out", out],
+            env=_env(), capture_output=True, text=True, timeout=900)
+        assert proc.returncode == 0, proc.stderr[-3000:] + proc.stdout[-1000:]
+        with open(out) as f:
+            return json.load(f)
+
+
+def test_quick_sweep_meets_the_bench_contract(quick_bench):
+    b = quick_bench
+    assert b["schema"] == "dcra-dse-bench/v1"
+    valid = [r for r in b["points"] if "metrics" in r]
+    assert len(valid) >= 24                      # evaluated config points
+    assert len(b["apps"]) >= 3                   # across >= 3 apps
+    assert b["pareto"]                           # non-empty frontier
+    frontier = {r["point_id"] for r in valid if r["pareto"]}
+    assert set(b["pareto"]) == frontier
+    for r in valid:
+        m = r["metrics"]
+        assert m["teps_geomean"] > 0 and m["package_usd"] > 0
+        assert np.isfinite(m["watts_geomean"])
+
+
+def test_quick_sweep_revalidates_a_winner_on_shard_map(quick_bench):
+    reval = quick_bench["revalidation"]
+    assert reval, "top-K winners must be revalidated on the executables"
+    assert all(r["ok"] for r in reval)
+    assert {r["point_id"] for r in reval} <= set(quick_bench["pareto"])
