@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.dispatch import dispatch_queues
 from repro.models.moe import GROUP_SIZE, capacity, init_moe, moe_einsum
 
 from .common import emit
@@ -30,9 +31,11 @@ def analytic_bytes(arch: str, tokens: int, d_model: int) -> dict:
     # einsum path: x_e [G,E,C,D] formed via dispatch mask (bf16 payload moved
     # through the a2a twice: dispatch + combine)
     einsum_bytes = 2 * G * E * C * d_model * 2
-    # dcra path: per expert-shard cap buffers, K copies of each token
+    # dcra path: per expert-shard cap buffers, K copies of each token —
+    # the bucket capacity the real kernel resolves through QueueConfig
     n_shards = min(E, 8)
-    cap = max(8, int(tokens * mc.top_k * mc.capacity_factor / n_shards))
+    cap = dispatch_queues(mc).channel_cap("dispatch", tokens * mc.top_k,
+                                          n_shards)
     dcra_bytes = 2 * n_shards * cap * d_model * 2 + n_shards * cap * 8
     return {"einsum_MB": einsum_bytes / 2**20, "dcra_MB": dcra_bytes / 2**20,
             "ratio": einsum_bytes / dcra_bytes}

@@ -72,6 +72,16 @@ def run_distributed(g, scale):
     row("wcc", w, ref.wcc_ref(g), st)
     print()
 
+    # Pareto-guided launch: pick the deployment from the tracked frontier
+    # instead of hand-tuning capacity_factor (repro.dse.autoconfig)
+    from repro.dse.autoconfig import autoconfigure
+    lc = autoconfigure(g, "bfs")
+    print(f"auto-config (bfs, objective=teps): {lc.point.point_id} "
+          f"[{lc.source}]")
+    d, st = dcra_bfs(g, 0, mesh, config=lc)   # reuse the resolved config
+    row("bfs[auto]", d, ref.bfs_ref(g, 0), st)
+    print()
+
 
 def main():
     ap = argparse.ArgumentParser()

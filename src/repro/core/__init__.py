@@ -5,7 +5,7 @@
 # owner-routed hierarchical MoE dispatch built on it (dispatch).
 from .cache import CacheModel, DRAMConfig, SRAMConfig          # noqa: F401
 from .compat import make_mesh, set_mesh, shard_map_unchecked   # noqa: F401
-from .dispatch import MeshInfo, moe_dcra                        # noqa: F401
+from .dispatch import MeshInfo, dispatch_queues, moe_dcra       # noqa: F401
 from .queues import QueueConfig, QueueStats                     # noqa: F401
 from .routing import (bucket, fused_all_to_all, gather_rows,    # noqa: F401
                       noc_all_to_all, owner_route,

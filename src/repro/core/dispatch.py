@@ -30,9 +30,24 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map_unchecked
+from .queues import QueueConfig
 from .routing import (bucket as _bucket, fused_all_to_all, gather_rows,
-                      noc_all_to_all as _a2a, round8 as _round8,
+                      noc_all_to_all as _a2a,
                       slot_scatter as _slot_scatter)
+
+
+def dispatch_queues(moe_cfg) -> QueueConfig:
+    """The MoE dispatch IQ sizing as a :class:`QueueConfig`.
+
+    The ``capacity_factor`` knob IS the paper's IQ-size axis (Table II
+    knob #8) — expressed here as relative ``iq_factors`` for the three
+    bounded queues the dispatch routes through: the stage-1 tile-NoC
+    bucket ("dispatch"), the stage-2 pod-portal bucket ("portal"), and the
+    per-local-expert receive bucket ("expert"). ``moe_dcra`` resolves every
+    bucket capacity with :meth:`QueueConfig.channel_cap` — the same path
+    the graph apps and the analytic ``TaskEngine`` use.
+    """
+    return QueueConfig.for_moe_dispatch(moe_cfg.capacity_factor)
 
 
 @dataclass(frozen=True)
@@ -101,10 +116,19 @@ def _expert_ffn(xe, wg, wu, wd, tp_axis, n_tp):
     return y
 
 
-def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
-    """DCRA owner-routed dispatch. x [B, S, D] -> (out [B,S,D], aux [])."""
+def moe_dcra(params, x, cfg, info: MeshInfo,
+             queues: Optional[QueueConfig] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """DCRA owner-routed dispatch. x [B, S, D] -> (out [B,S,D], aux []).
+
+    ``queues`` overrides the dispatch queue sizing; the default derives it
+    from ``cfg.moe.capacity_factor`` via :func:`dispatch_queues` (a
+    ``DesignPoint.moe_queues()`` plugs in here for DSE sweeps).
+    """
     mc = cfg.moe
     assert mc is not None
+    if queues is None:
+        queues = dispatch_queues(mc)
     E = mc.num_experts
     group, spans_pods, tp_ffn = info.dispatch_plan(E)
     n_group = info.axis_size(group)
@@ -182,7 +206,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
         src_f = jnp.repeat(jnp.arange(T_l, dtype=jnp.int32), K)
 
         owner = eids_f // E_local                           # global shard id
-        cap1 = _round8(int(T_l * K * mc.capacity_factor / n_ex))
+        cap1 = queues.channel_cap("dispatch", T_l * K, n_ex)
         all_valid = jnp.ones_like(eids_f, dtype=bool)
 
         if not spans_pods:
@@ -204,7 +228,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
             n1 = xs1.shape[0]
             # ---- stage 2 over pod axis (die-NoC portal) ----------------
             valid1 = pcs >= 0
-            cap2 = _round8(int(n1 * mc.capacity_factor / n_pod))
+            cap2 = queues.channel_cap("portal", n1, n_pod)
             _, (eid2, slot1_of_s2), _, _ = _bucket(
                 pcs[:, None] * 0, jnp.maximum(pcs, 0), valid1,
                 [eids1, jnp.arange(n1, dtype=jnp.int32)], n_pod, cap2)
@@ -220,7 +244,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo) -> Tuple[jax.Array, jax.Array]:
             ye = ye * validr[:, None].astype(ye.dtype)
         else:
             # second-level IQ: bucket received tasks by local expert
-            cap_e = _round8(int(mc.capacity_factor * N_r / E_local))
+            cap_e = queues.channel_cap("expert", N_r, E_local)
             _, (srce,), _, _ = _bucket(
                 validr[:, None].astype(jnp.int32) * 0, jnp.maximum(eidr, 0),
                 validr, [jnp.arange(N_r, dtype=jnp.int32)], E_local, cap_e)

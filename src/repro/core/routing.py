@@ -31,10 +31,9 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-
-def round8(x: int) -> int:
-    """Round a capacity up to a multiple of 8 (TPU lane alignment)."""
-    return max(8, -(-x // 8) * 8)
+# Capacity helpers live with the queue-sizing source of truth; re-exported
+# here because every routing call site thinks in lane-aligned bucket sizes.
+from .queues import round8  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +193,16 @@ def owner_route_hier(vals, slot_ids, owner, valid, n_intra, intra_axis,
 
 
 def reduce_received(recv_slot, recv_val, n_local, op):
-    """Apply received tasks at the owner: segment add/min into local slots."""
+    """Apply received tasks at the owner: segment add/min/store into local
+    slots.
+
+    ``op='store'`` is a last-writer overwrite with a *deterministic*
+    tie-break: among duplicate destinations the maximum value wins —
+    independent of bucket/slot arrival order, and by construction the same
+    winner the analytic ``TaskEngine._reduce(op='store')`` picks for the
+    same task stream (differential-tested in tests/test_core_engine.py).
+    Slots that received no task read as 0.
+    """
     valid = recv_slot >= 0
     seg = jnp.where(valid, recv_slot, n_local)
     if op == "add":
@@ -204,6 +212,10 @@ def reduce_received(recv_slot, recv_val, n_local, op):
         y = jax.ops.segment_min(jnp.where(valid, recv_val, jnp.inf), seg,
                                 num_segments=n_local + 1)[:n_local]
         y = jnp.where(jnp.isfinite(y), y, jnp.inf)
+    elif op == "store":
+        y = jax.ops.segment_max(jnp.where(valid, recv_val, -jnp.inf), seg,
+                                num_segments=n_local + 1)[:n_local]
+        y = jnp.where(jnp.isfinite(y), y, 0.0)
     else:
         raise ValueError(op)
     return y

@@ -78,18 +78,20 @@ class RunStats:
 
 
 class TaskEngine:
-    """Owner-computes execution over a virtual tile grid."""
+    """Owner-computes execution over a virtual tile grid.
 
-    def __init__(self, config: EngineConfig, n_items: int,
-                 iq_capacity: Optional[int] = None):
+    All queue sizing comes from ``config.queues`` (:class:`QueueConfig`) —
+    per-task IQ capacities bound every :meth:`route` round (Table II knob
+    #8, Fig. 10); build the config with ``QueueConfig.unbounded()`` for the
+    legacy unbounded statistics.
+    """
+
+    def __init__(self, config: EngineConfig, n_items: int):
         self.cfg = config
         self.n = n_items                       # global index space (vertices)
         self.T = config.grid.n_tiles
         self.cache = CacheModel(config.sram, config.dram)
         self.stats = RunStats()
-        # default bounded-IQ model for every route() call (the DSE sweep's
-        # compile-time queue axis); None keeps the legacy unbounded stats.
-        self.iq_capacity = iq_capacity
 
     # ---- PGAS layout -----------------------------------------------------
     def owner(self, idx: np.ndarray) -> np.ndarray:
@@ -102,8 +104,7 @@ class TaskEngine:
               target: Optional[np.ndarray] = None, op: str = "add",
               payload_words: int = 2,
               stream_bytes_per_task: float = 0.0,
-              random_bytes_per_task: float = 0.0,
-              iq_capacity: Optional[int] = None) -> RoundStats:
+              random_bytes_per_task: float = 0.0) -> RoundStats:
         """Deliver one round of task invocations.
 
         src_idx/dst_idx: global item ids (message endpoints define tiles);
@@ -112,17 +113,29 @@ class TaskEngine:
         ``target=None`` records routing stats only (task-invocation
         messages whose effect is to spawn downstream tasks).
 
-        ``iq_capacity`` models the bounded input queue the distributed
-        routing layer (:mod:`repro.core.routing`) enforces: each
-        (src tile -> dst tile) ingress channel accepts at most
-        ``iq_capacity`` tasks per round; the overflow count is recorded in
-        ``RoundStats.drops``. The reduction itself stays exact — drops are
-        *modeled* traffic loss for the cost model, and the analytic count
-        equals the real drop count of the shard_map path for the same task
-        stream (property-tested in tests/test_routing.py).
+        The per-task IQ capacity resolves through
+        ``self.cfg.queues.channel_cap(task, ...)`` — explicit entry counts
+        (``iq_sizes`` / ``default_iq``) are honored exactly, and
+        factor-sized tasks (``iq_factors``, the MoE-style relative knob)
+        derive the same lane-aligned capacity the executable bucketing
+        would, so a factor-based ``QueueConfig`` bounds the analytic model
+        instead of silently disabling it. It models the bounded input
+        queue the distributed routing layer (:mod:`repro.core.routing`)
+        enforces: each (src tile -> dst tile)
+        ingress channel accepts at most that many tasks per round; the
+        overflow count is recorded in ``RoundStats.drops``. Same-tile
+        (src == dst) channels are bounded too — the shard_map ``bucket``
+        primitive queues a shard's self-owned tasks through its own bucket
+        at the same capacity, so charging the self channel here is what
+        makes the analytic and executable drop counts agree *by
+        construction* (property-tested in tests/test_routing.py and
+        tests/test_dse.py, including heavy self-traffic streams). The
+        reduction itself stays exact — drops are *modeled* traffic loss
+        for the cost model.
         """
-        if iq_capacity is None:
-            iq_capacity = self.iq_capacity
+        # per-sender-tile task load mirrors the executable's e_local
+        cap = self.cfg.queues.channel_cap(
+            task, -(-len(dst_idx) // self.T), self.T)
         g = self.cfg.grid
         src_t = self.owner(np.asarray(src_idx))
         dst_t = self.owner(np.asarray(dst_idx))
@@ -143,11 +156,11 @@ class TaskEngine:
         in_per_tile = np.bincount(dst_t, minlength=self.T)
         out_per_tile = np.bincount(src_t, minlength=self.T)
         rs.tasks_per_tile_peak = int(in_per_tile.max(initial=0))
-        if iq_capacity is not None:
+        if cap is not None:
             # O(n_tasks): only touched (src,dst) channels, never a dense TxT
             _, per_chan = np.unique(src_t * self.T + dst_t,
                                     return_counts=True)
-            rs.drops = int(np.maximum(per_chan - iq_capacity, 0).sum())
+            rs.drops = int(np.maximum(per_chan - cap, 0).sum())
         rs.stream_bytes = stream_bytes_per_task * len(dst_idx)
         rs.random_bytes = random_bytes_per_task * len(dst_idx)
         self.stats.queue.record(task, in_per_tile, out_per_tile)
@@ -179,7 +192,13 @@ class TaskEngine:
             uids = ds[first]
             np.minimum.at(target, uids, mins)  # one op per unique id — cheap
         elif op == "store":
-            target[dst_idx] = values
+            # deterministic overwrite: among duplicate destinations the
+            # maximum value wins, independent of input (= routing) order —
+            # the same winner the shard_map ``reduce_received`` picks.
+            order = np.argsort(dst_idx, kind="stable")
+            ds, vs = dst_idx[order], np.asarray(values)[order]
+            first = np.flatnonzero(np.r_[True, ds[1:] != ds[:-1]])
+            target[ds[first]] = np.maximum.reduceat(vs, first)
         else:
             raise ValueError(op)
 

@@ -19,8 +19,17 @@ already has into that loop:
 * :mod:`repro.dse.shardcheck`— subprocess worker re-validating analytic
   message/drop counts on the real ``shard_map`` executables;
 * :mod:`repro.dse.sweep`     — ``python -m repro.dse.sweep`` CLI emitting
-  the tracked ``BENCH_dse.json`` perf trajectory.
+  the tracked ``BENCH_dse.json`` perf trajectory;
+* :mod:`repro.dse.autoconfig`— Pareto-guided *launch-time* selection: the
+  ``dcra_*`` apps' ``config="auto"`` picks a frontier point for the
+  dataset at hand (signature matching + interpolation, mini-sweep
+  fallback);
+* :mod:`repro.dse.compare`   — ``python -m repro.dse.compare`` trajectory
+  regression gate between successive ``BENCH_dse.json`` artifacts.
 """
+from .autoconfig import (BASELINE, DatasetSignature,            # noqa: F401
+                         LaunchConfig, autoconfigure, launch_for,
+                         signature_of)
 from .evaluate import (APPS, ConfigResult, Evaluator, PointResult,  # noqa: F401
                        config_cost, evaluate, geomean, load_datasets,
                        run_app)

@@ -12,6 +12,14 @@ never let one failure kill the sweep". This module owns that loop:
   previously-written records back to task keys), appends one record per
   task, and rewrites the file after every task so a crash loses at most
   the in-flight point.
+
+Every record — error records included — is stamped with its ``task_key``,
+so resume never depends on ``key_of`` being able to reconstruct a key from
+a failure payload (the pre-PR-3 bug: error records carried no key, so
+errored points were silently re-run on every resume while their stale
+error records piled up in the file). Re-running failures is now an
+explicit choice: ``retry_errors=True`` drops the matching error records
+and runs those tasks again; the default treats them as done.
 """
 from __future__ import annotations
 
@@ -42,20 +50,38 @@ def _write(out: Optional[str], results: List[Dict]) -> None:
             json.dump(results, f, indent=1)
 
 
+def record_key(rec: Dict,
+               key_of: Optional[Callable[[Dict], Optional[str]]] = None
+               ) -> Optional[str]:
+    """A record's task key: the stamped ``task_key`` wins, ``key_of`` is
+    the fallback for files written before stamping existed."""
+    key = rec.get("task_key")
+    if key is None and key_of is not None:
+        key = key_of(rec)
+    return key
+
+
 def run_sweep(tasks: Iterable[SweepTask], out: Optional[str] = None,
               resume: bool = True,
               key_of: Optional[Callable[[Dict], Optional[str]]] = None,
               verbose: bool = True,
-              raise_errors: bool = False) -> List[Dict]:
+              raise_errors: bool = False,
+              retry_errors: bool = False) -> List[Dict]:
     """Run every task not already recorded; returns the full record list.
 
     ``out=None`` keeps everything in memory (single-shot sweeps that
-    post-process before writing, e.g. the BENCH emitter).
+    post-process before writing, e.g. the BENCH emitter). Every record is
+    stamped with its ``task_key`` so errored points resume as *done*;
+    ``retry_errors=True`` re-runs them instead (their stale error records
+    are dropped, not duplicated).
     """
+    tasks = list(tasks)
     results = load_results(out) if resume else []
-    done = set()
-    if key_of is not None:
-        done = {key_of(r) for r in results}
+    if retry_errors:
+        keys = {t.key for t in tasks}
+        results = [r for r in results
+                   if not ("error" in r and record_key(r, key_of) in keys)]
+    done = {record_key(r, key_of) for r in results}
     for task in tasks:
         if task.key in done:
             continue
@@ -66,6 +92,7 @@ def run_sweep(tasks: Iterable[SweepTask], out: Optional[str] = None,
                 raise
             traceback.print_exc()
             rec = {"error": f"{type(e).__name__}: {e}"}
+        rec.setdefault("task_key", task.key)
         for k, v in task.meta.items():
             rec.setdefault(k, v)
         results.append(rec)

@@ -53,8 +53,11 @@ def run_app(app: str, engine: TaskEngine, g, rng_seed: int = 0):
         x = np.random.default_rng(rng_seed).random(g.n)
         return apps.spmv(engine, g, x)
     if app == "histogram":
-        els = datasets.histogram_data(g.nnz, max(g.n // 16, 64))
-        return apps.histogram(engine, els, max(g.n // 16, 64))
+        if hasattr(g, "nnz"):      # graph stand-in: synthesize a stream
+            els = datasets.histogram_data(g.nnz, max(g.n // 16, 64))
+            return apps.histogram(engine, els, max(g.n // 16, 64))
+        els = np.asarray(g)        # a raw element stream IS the dataset
+        return apps.histogram(engine, els, max(int(els.max()) + 1, 64))
     raise ValueError(app)
 
 
@@ -109,18 +112,16 @@ def _price(stats: RunStats, cfg: EngineConfig, g,
 
 
 def evaluate(cfg: EngineConfig, g, app: str,
-             cost_usd: Optional[float] = None,
-             iq_capacity: Optional[int] = None) -> ConfigResult:
+             cost_usd: Optional[float] = None) -> ConfigResult:
     """Run one (config, dataset, app) cell through the analytic stack.
 
-    Bounded-IQ drop modeling is opt-in via ``iq_capacity`` (pass
-    ``cfg.queues.iq("T3")`` to bound at the config's sizing); the default
-    keeps the legacy unbounded stats the figure benchmarks pin their
-    trends on. The DSE :class:`Evaluator` always threads the design
-    point's IQ capacity through.
+    Queue physics comes from ``cfg.queues`` alone: ``TaskEngine.route``
+    bounds every round at ``queues.iq(task)``, so the figure benchmarks
+    and the DSE sweep price the same bounded-IQ drop model (baselines
+    re-pinned under it in PR 3; ``QueueConfig.unbounded()`` restores the
+    legacy stats when needed).
     """
-    engine = TaskEngine(cfg, getattr(g, "n", len(np.atleast_1d(g))),
-                        iq_capacity=iq_capacity)
+    engine = TaskEngine(cfg, getattr(g, "n", len(np.atleast_1d(g))))
     _, stats = run_app(app, engine, g)
     if cost_usd is None:
         cost_usd = config_cost(cfg)
@@ -196,9 +197,10 @@ class Evaluator:
         key = point.stats_key + (app, dname)
         if key not in self._stats:
             g = self.data[dname]
+            # the point's IQ axis flows through engine_config().queues —
+            # QueueConfig is the only capacity source
             engine = TaskEngine(point.engine_config(),
-                                getattr(g, "n", len(np.atleast_1d(g))),
-                                iq_capacity=point.iq_capacity)
+                                getattr(g, "n", len(np.atleast_1d(g))))
             run_app(app, engine, g)
             self._stats[key] = engine.stats
         return self._stats[key]

@@ -8,10 +8,17 @@ paths at the same parallelism and comparing message / drop counts:
 
 * executable: ``dcra_spmv`` / ``dcra_histogram`` from
   :mod:`repro.sparse.jax_apps` under ``shard_map`` on ``n_dev`` host
-  devices, with the point's IQ capacity pinned via ``cap=``;
-* analytic: ``TaskEngine.route(iq_capacity=cap)`` on a ``TileGrid(1,
-  n_dev)`` — one tile per shard, so the per-(source shard → owner) channel
-  structure is identical (the property ``tests/test_routing.py`` pins).
+  devices, with the point's IQ capacity pinned via ``cap=`` (a
+  ``QueueConfig.from_cap`` override under the hood);
+* analytic: ``TaskEngine.route`` with ``QueueConfig(default_iq=cap)`` on a
+  ``TileGrid(1, n_dev)`` — one tile per shard, so the per-(source shard →
+  owner) channel structure is identical (the property
+  ``tests/test_routing.py`` pins).
+
+The ``histogram_self`` app is the heavy self-traffic case: every shard's
+element stream targets mostly bins the shard itself owns, so overflow lands
+on the (d -> d) channels — proving the analytic model's same-tile drop
+charging matches the executable ``bucket``'s treatment of self-owned tasks.
 
 Must run in its own process: the fake-device count has to be set before
 jax imports (same pattern as ``benchmarks/noc_routing.py``). Protocol:
@@ -40,10 +47,11 @@ RESULT_PREFIX = "RESULT "
 
 def _analytic_counts(dest: np.ndarray, n: int, n_dev: int, cap: int):
     """The same stream through the analytic twin at shard parallelism."""
+    from ..core.queues import QueueConfig
     from ..core.task_engine import EngineConfig, TaskEngine
     from ..core.topology import TileGrid
-    engine = TaskEngine(EngineConfig(grid=TileGrid(1, n_dev)), n,
-                        iq_capacity=cap)
+    engine = TaskEngine(EngineConfig(grid=TileGrid(1, n_dev),
+                                     queues=QueueConfig(default_iq=cap)), n)
     e_local = len(dest) // n_dev
     shard_of = np.repeat(np.arange(n_dev), e_local)
     valid = dest >= 0
@@ -86,6 +94,23 @@ def check_point(check: dict, n_dev: int, scale: int, seed: int) -> list:
             y, dropped = dcra_histogram(els, n_items, mesh, cap=cap)
             # the histogram IS a unit-payload scatter: its own output
             # counts the delivered tasks
+            kept = int(round(float(np.asarray(y).sum())))
+        elif app == "histogram_self":
+            # heavy self-traffic: ~90% of each shard's elements hash to
+            # bins the shard itself owns (bin % n_dev == shard), so IQ
+            # overflow concentrates on the same-tile (d -> d) channels
+            n_items = max(g.n // 16, 64)
+            e_local = max(g.nnz // n_dev, 32)
+            rng = np.random.default_rng(seed + 7)
+            shard_of = np.repeat(np.arange(n_dev), e_local)
+            bins = rng.integers(0, max(n_items // n_dev, 1),
+                                n_dev * e_local) * n_dev
+            self_mask = rng.random(n_dev * e_local) < 0.9
+            owner = np.where(self_mask, shard_of,
+                             rng.integers(0, n_dev, n_dev * e_local))
+            els = np.minimum(bins + owner, n_items - 1)
+            dest, _ = histogram_task_stream(els, n_dev)
+            y, dropped = dcra_histogram(els, n_items, mesh, cap=cap)
             kept = int(round(float(np.asarray(y).sum())))
         else:
             raise ValueError(f"unsupported revalidation app {app!r}")

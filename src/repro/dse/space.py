@@ -58,6 +58,9 @@ class DesignPoint:
     topology: str = "hier_torus"
     iq_capacity: int = 12              # per-channel input queue (tasks/round)
     oq_capacity: int = 12              # producer output queue (T3)
+    # The MoE dispatch IQ knob (relative sizing; ROADMAP fold-in: the
+    # dispatch capacity factor IS the IQ axis, routed via QueueConfig).
+    moe_capacity_factor: float = 1.25
 
     def __post_init__(self):
         if self.topology not in TOPOLOGIES:
@@ -76,12 +79,10 @@ class DesignPoint:
     def engine_config(self) -> EngineConfig:
         """The point as an ``EngineConfig``.
 
-        Note the IQ duality: ``QueueConfig`` carries the queue *sizing*
-        knobs the cost model prices (OQ stalls), but the analytic drop
-        model is opt-in — ``TaskEngine`` only bounds input queues when
-        given ``iq_capacity`` explicitly (the Evaluator threads
-        ``point.iq_capacity`` through; legacy figure sweeps stay
-        unbounded so their trends remain comparable across PRs).
+        ``QueueConfig`` is the single IQ source of truth: ``TaskEngine
+        .route`` reads ``queues.iq(task)`` per round, so this point's
+        ``iq_capacity`` bounds the analytic drop model directly — figure
+        baselines are pinned under bounded-IQ physics since PR 3.
         """
         return EngineConfig(
             grid=self.grid(),
@@ -117,6 +118,12 @@ class DesignPoint:
         hbm_gb = dram.gb_per_die * dies if dram.present else 0.0
         return package_cost(dies, self.die_area_mm2(), hbm_gb)
 
+    def moe_queues(self) -> QueueConfig:
+        """The point's MoE dispatch sizing as a ``QueueConfig`` (pass to
+        ``moe_dcra(..., queues=...)``) — same resolution path as the graph
+        apps, no parallel capacity-factor knob."""
+        return QueueConfig.for_moe_dispatch(self.moe_capacity_factor)
+
     def package_usd(self) -> float:
         return self.package_bill().total
 
@@ -139,7 +146,7 @@ class DesignPoint:
                 f"_w{self.noc_width_bits}_f{self.noc_freq_ghz:g}"
                 f"_{self.mem_tech}_p{self.dies_per_package}"
                 f"_s{self.sram_kb_per_tile}_iq{self.iq_capacity}"
-                f"_oq{self.oq_capacity}")
+                f"_oq{self.oq_capacity}_mcf{self.moe_capacity_factor:g}")
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -175,22 +182,30 @@ class ConfigSpace:
     topologies: Tuple[str, ...] = TOPOLOGIES
     iq_capacities: Tuple[int, ...] = (12, 48)
     oq_capacities: Tuple[int, ...] = (12, 48)
+    # MoE-only axis: consumed via DesignPoint.moe_queues() -> moe_dcra.
+    # The graph-app Evaluator is blind to it, so widen this tuple only in
+    # sweeps that actually run MoE cells — for graph-only sweeps extra
+    # values just duplicate every record (identical metrics, and Pareto
+    # keeps duplicate optima by design).
+    moe_capacity_factors: Tuple[float, ...] = (1.25,)
 
     def points(self) -> Iterator[DesignPoint]:
-        for (die, w, f, kb, pus, mem, dpp, side, topo, iq, oq) in \
+        for (die, w, f, kb, pus, mem, dpp, side, topo, iq, oq, mcf) in \
                 itertools.product(self.die_sides, self.noc_width_bits,
                                   self.noc_freq_ghz, self.sram_kb_per_tile,
                                   self.pus_per_tile, self.mem_techs,
                                   self.dies_per_package, self.grid_sides,
                                   self.topologies, self.iq_capacities,
-                                  self.oq_capacities):
+                                  self.oq_capacities,
+                                  self.moe_capacity_factors):
             if side % die != 0:
                 continue
             yield DesignPoint(die_side=die, noc_width_bits=w,
                               noc_freq_ghz=f, sram_kb_per_tile=kb,
                               pus_per_tile=pus, mem_tech=mem,
                               dies_per_package=dpp, grid_side=side,
-                              topology=topo, iq_capacity=iq, oq_capacity=oq)
+                              topology=topo, iq_capacity=iq, oq_capacity=oq,
+                              moe_capacity_factor=mcf)
 
     def __len__(self) -> int:
         return sum(1 for _ in self.points())

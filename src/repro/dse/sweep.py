@@ -26,6 +26,7 @@ import sys
 import time
 from typing import Dict, List, Optional, Sequence
 
+from .autoconfig import signature_of
 from .driver import SweepTask, run_sweep
 from .evaluate import APPS, Evaluator, load_datasets
 from .pareto import DEFAULT_OBJECTIVES, pareto_frontier
@@ -100,6 +101,10 @@ def run(space: ConfigSpace, apps_list: Sequence[str], scale: int,
         "apps": list(apps_list),
         "datasets": sorted(data),
         "dataset_scale": scale,
+        # what launch-time auto-configuration matches against (additive to
+        # schema v1; autoconfig recomputes from dataset_scale when absent)
+        "dataset_signatures": {name: signature_of(g).to_dict()
+                               for name, g in data.items()},
         "points": records,
         "pareto": sorted(frontier_ids),
         "revalidation": reval,

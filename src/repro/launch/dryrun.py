@@ -239,6 +239,8 @@ def main():
                     choices=("single", "multi", "both"))
     ap.add_argument("--out", default=DEFAULT_OUT)
     ap.add_argument("--append", action="store_true")
+    ap.add_argument("--retry-errors", action="store_true",
+                    help="re-run previously errored cells on resume")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else list(ARCH_IDS)
@@ -256,6 +258,7 @@ def main():
         for arch in archs for shape in shapes for mp in meshes]
     results = run_sweep(
         tasks, out=args.out, resume=args.append,
+        retry_errors=args.retry_errors,
         key_of=lambda r: f"{r.get('arch')}|{r.get('shape')}|"
                          f"{r.get('mesh')}")
     print(f"dry-run complete: {summarize(results, 'compute_s')} "

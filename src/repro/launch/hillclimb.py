@@ -117,11 +117,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="cell id A/B/C or tag")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--retry-errors", action="store_true",
+                    help="re-run previously errored variants on resume")
     args = ap.parse_args()
 
     tasks = [_task(*variant) for variant in VARIANTS
              if not args.only or args.only in (variant[0], variant[2])]
     run_sweep(tasks, out=args.out, resume=True,
+              retry_errors=args.retry_errors,
               key_of=lambda r: r.get("tag"))
     print("hillclimb pass done")
 

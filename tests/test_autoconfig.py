@@ -1,0 +1,272 @@
+"""Pareto-guided launch auto-configuration (:mod:`repro.dse.autoconfig`).
+
+Part A — selection properties against the committed ``BENCH_dse.json``:
+deterministic for a fixed file, objective ordering respected, and the
+acceptance bar: ``config="auto"`` never picks a point whose analytic TEPS
+on the quick datasets is below the all-defaults baseline.
+
+Part B — the executable path (subprocess, 8 fake host devices):
+``dcra_bfs(g, root, mesh, config="auto")`` selects a frontier point, still
+matches the numpy oracle, and the auto-resolved ``QueueConfig`` sizing
+stays drop-free at emulation granularity.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.dse.autoconfig import (BASELINE, MINISWEEP_THRESHOLD,
+                                  DatasetSignature, autoconfigure,
+                                  bench_signatures, interpolate_record,
+                                  launch_for, load_bench, objective_score,
+                                  objective_weights, select_from_frontier,
+                                  signature_distance, signature_of)
+from repro.dse.evaluate import evaluate, load_datasets
+from repro.sparse import datasets
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def bench():
+    b = load_bench()
+    assert b is not None, "committed BENCH_dse.json missing"
+    return b
+
+
+@pytest.fixture(scope="module")
+def quick_data(bench):
+    return load_datasets(int(bench["dataset_scale"]))
+
+
+# ---------------------------------------------------------------------------
+# Part A: signatures
+# ---------------------------------------------------------------------------
+
+def test_signature_distance_is_a_premetric():
+    a = DatasetSignature(n=256, nnz=4096, skew=1.2)
+    assert signature_distance(a, a) == 0.0
+    b = DatasetSignature(n=4096, nnz=65536, skew=1.2)
+    assert signature_distance(a, b) == signature_distance(b, a) > 0.9
+
+
+def test_bench_signatures_recompute_matches_recorded(bench):
+    if "dataset_signatures" not in bench:
+        pytest.skip("bench predates recorded signatures")
+    recorded = bench_signatures(bench)
+    stripped = {k: v for k, v in bench.items()
+                if k != "dataset_signatures"}
+    recomputed = bench_signatures(stripped)
+    assert set(recorded) == set(recomputed)
+    for name in recorded:
+        assert recorded[name].n == recomputed[name].n
+        assert recorded[name].nnz == recomputed[name].nnz
+        assert recorded[name].skew == pytest.approx(recomputed[name].skew)
+
+
+# ---------------------------------------------------------------------------
+# Part A: frontier selection
+# ---------------------------------------------------------------------------
+
+def test_selection_is_deterministic_for_a_fixed_bench(bench, quick_data):
+    g = quick_data[sorted(quick_data)[0]]
+    picks = [autoconfigure(g, "bfs", bench=bench) for _ in range(2)]
+    assert picks[0].point == picks[1].point
+    assert picks[0].source == picks[1].source == "frontier"
+    assert picks[0].score == picks[1].score
+
+
+def test_selection_respects_the_objective_ordering(bench, quick_data):
+    """The frontier argmax really is the argmax of the interpolated
+    objective, for every supported objective."""
+    g = quick_data[sorted(quick_data)[0]]
+    sig = signature_of(g)
+    sigs = bench_signatures(bench)
+    dists = {d: signature_distance(sig, s) for d, s in sigs.items()}
+    from repro.dse.autoconfig import frontier_records
+    records = frontier_records(bench)
+    assert records
+    for objective in ("teps", "watts", "usd", {"teps": 0.7, "watts": 0.3}):
+        weights = objective_weights(objective)
+        point, score, _ = select_from_frontier(bench, sig, "bfs", weights)
+        scores = [objective_score(weights,
+                                  *interpolate_record(r, "bfs", dists))
+                  for r in records]
+        assert score == pytest.approx(max(scores))
+
+
+def test_objectives_can_disagree_on_a_synthetic_tradeoff():
+    """A fast-but-expensive point vs a cheap-but-slow one: "teps" and
+    "usd" must pick different winners."""
+    sig = DatasetSignature(n=256, nnz=4096, skew=1.0)
+    def point_cfg(iq):
+        from repro.dse.space import DesignPoint
+        return DesignPoint(iq_capacity=iq).to_dict()
+    bench = {
+        "dataset_signatures": {"D": sig.to_dict()},
+        "datasets": ["D"],
+        "points": [
+            {"point_id": "fast", "pareto": True, "config": point_cfg(48),
+             "metrics": {"teps_geomean": 100.0, "watts_geomean": 10.0,
+                         "system_usd": 1000.0},
+             "per_cell": {"bfs:D": {"teps": 100.0, "seconds": 1.0,
+                                    "energy_j": 10.0}}},
+            {"point_id": "cheap", "pareto": True, "config": point_cfg(12),
+             "metrics": {"teps_geomean": 50.0, "watts_geomean": 2.0,
+                         "system_usd": 100.0},
+             "per_cell": {"bfs:D": {"teps": 50.0, "seconds": 1.0,
+                                    "energy_j": 2.0}}},
+        ],
+    }
+    pick = {}
+    for objective in ("teps", "watts", "usd"):
+        w = objective_weights(objective)
+        point, _, dist = select_from_frontier(bench, sig, "bfs", w)
+        assert dist == 0.0
+        pick[objective] = point.iq_capacity
+    assert pick["teps"] == 48          # throughput winner
+    assert pick["usd"] == 12           # teps/$ winner
+    assert pick["watts"] == 12         # power winner
+
+
+def test_unknown_objective_rejected():
+    with pytest.raises(ValueError):
+        objective_weights("joules")
+    with pytest.raises(ValueError):
+        objective_weights({"latency": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# Part A: the acceptance bar — auto never below the all-defaults baseline
+# ---------------------------------------------------------------------------
+
+def test_auto_teps_at_least_baseline_on_quick_datasets(bench, quick_data):
+    """`config="auto"` (objective teps) must select a frontier point whose
+    analytic TEPS on each quick dataset is >= the hand-tuned all-defaults
+    deployment the benchmarks launch with."""
+    for dname, g in quick_data.items():
+        for app in ("bfs", "spmv"):
+            lc = autoconfigure(g, app, bench=bench)
+            auto = evaluate(lc.point.engine_config(), g, app).teps
+            base = evaluate(BASELINE.engine_config(), g, app).teps
+            assert auto >= base * (1 - 1e-9), (dname, app, auto, base)
+
+
+def test_minisweep_fallback_for_faraway_datasets(bench):
+    tiny = datasets.erdos_renyi(16, 4, seed=3)
+    sig = signature_of(tiny)
+    sigs = bench_signatures(bench)
+    assert min(signature_distance(sig, s)
+               for s in sigs.values()) > MINISWEEP_THRESHOLD
+    lc = autoconfigure(tiny, "bfs", bench=bench)
+    assert lc.source == "mini-sweep"
+    # the baseline is a candidate, so the winner can never score below it
+    auto = evaluate(lc.point.engine_config(), tiny, "bfs").teps
+    base = evaluate(BASELINE.engine_config(), tiny, "bfs").teps
+    assert auto >= base * (1 - 1e-9)
+
+
+def test_baseline_survives_mini_candidate_truncation():
+    """A large frontier (full-space nightly: 10+ Pareto points) must not
+    push the all-defaults baseline out of the mini-sweep candidate list —
+    it is what anchors the never-below-baseline guarantee."""
+    from repro.dse.autoconfig import _mini_candidates
+    frontier = [BASELINE.with_(iq_capacity=8 * i) for i in range(2, 16)]
+    cands = _mini_candidates(frontier)
+    assert len(cands) <= 10
+    assert BASELINE in cands
+
+
+def test_element_stream_signature_lives_in_bin_space():
+    """Histogram streams are signatured as (bins, tasks), like the sweep's
+    histogram cells — not (len, len), which could never be near any
+    recorded graph signature."""
+    els = datasets.histogram_data(1 << 12, 64, seed=4)
+    sig = signature_of(els)
+    assert sig.n == 64 and sig.nnz == len(els)
+
+
+def test_config_conflicts_with_explicit_sizing_kwargs(quick_data):
+    from repro.sparse.jax_apps import dcra_bfs, dcra_spmv
+    g = quick_data[sorted(quick_data)[0]]
+    with pytest.raises(ValueError, match="conflicts"):
+        dcra_bfs(g, 0, mesh=None, capacity_factor=2.0, config="auto")
+    with pytest.raises(ValueError, match="conflicts"):
+        dcra_spmv(g, np.ones(g.n), mesh=None, cap=4, config="auto")
+
+
+def test_launch_for_wraps_an_explicit_point(quick_data):
+    g = quick_data[sorted(quick_data)[0]]
+    lc = launch_for(BASELINE, g)
+    assert lc.source == "explicit" and lc.point == BASELINE
+    assert lc.queues.iq("T3") == BASELINE.iq_capacity
+    # device folding: per-shard capacity clamps at the local slice
+    q = lc.device_queues(n_dev=8, e_local=500)
+    assert q.channel_cap("T3", 500, 8) == 500
+
+
+# ---------------------------------------------------------------------------
+# Part B: the executable path under shard_map (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.dse.autoconfig import autoconfigure
+from repro.sparse import datasets, ref
+from repro.sparse.jax_apps import dcra_bfs, dcra_spmv
+
+mesh = make_mesh((8,), ('data',))
+g = datasets.rmat(8, edge_factor=16, seed=1)      # a quick-bench dataset
+res = {}
+
+lc = autoconfigure(g, 'bfs')
+res['source'] = lc.source
+res['point_id'] = lc.point.point_id
+
+d, stats = dcra_bfs(g, 0, mesh, config='auto')
+res['bfs_err'] = float(np.max(np.abs(d - ref.bfs_ref(g, 0))))
+res['bfs_drops'] = stats.total_drops
+res['bfs_rounds'] = stats.rounds
+
+x = np.random.default_rng(0).random(g.n)
+y, drops = dcra_spmv(g, x, mesh, config='auto')
+want = ref.spmv_ref(g, x)
+res['spmv_err'] = float(np.max(np.abs(np.asarray(y) - want))
+                        / max(1.0, float(np.abs(want).max())))
+res['spmv_drops'] = int(drops)
+print('RESULT ' + json.dumps(res))
+"""
+
+
+@pytest.fixture(scope="module")
+def exe_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_auto_config_selects_a_frontier_point_for_bench_data(exe_results):
+    assert exe_results["source"] == "frontier"
+
+
+def test_auto_configured_bfs_matches_oracle(exe_results):
+    assert exe_results["bfs_err"] == 0.0
+    assert exe_results["bfs_drops"] == 0      # device-folded IQ is lossless
+    assert 0 < exe_results["bfs_rounds"] < 128
+
+
+def test_auto_configured_spmv_matches_oracle(exe_results):
+    assert exe_results["spmv_err"] < 1e-4
+    assert exe_results["spmv_drops"] == 0

@@ -77,6 +77,41 @@ def test_route_reduction_matches_numpy(seed, op):
     assert rs.hops >= rs.messages            # >= 1 hop per remote message
 
 
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_store_tiebreak_is_order_independent_and_matches_shardmap(seed):
+    """op='store' with duplicate destinations: the max value wins,
+    whatever order the tasks arrive in — and the shard_map-side
+    ``reduce_received`` picks the same winner for the same stream
+    (the two paths agree by construction, not by input order)."""
+    import jax.numpy as jnp
+    from repro.core.routing import reduce_received
+
+    rng = np.random.default_rng(seed)
+    n = 32
+    dst = rng.integers(0, n, 200)                 # dense duplicates
+    vals = rng.random(200)
+    perm = rng.permutation(200)                   # a second arrival order
+
+    t1, t2 = np.zeros(n), np.zeros(n)
+    TaskEngine._reduce(dst, vals, t1, "store")
+    TaskEngine._reduce(dst[perm], vals[perm], t2, "store")
+    assert np.array_equal(t1, t2)                 # order-independent
+
+    want = np.zeros(n)
+    np.maximum.at(want, dst, vals)                # oracle: max per dest
+    touched = np.zeros(n, bool)
+    touched[dst] = True
+    assert np.allclose(t1[touched], want[touched])
+    assert np.all(t1[~touched] == 0)              # untouched slots keep 0
+
+    y = np.asarray(reduce_received(jnp.asarray(dst, jnp.int32),
+                                   jnp.asarray(vals, jnp.float32),
+                                   n, "store"))
+    assert np.allclose(y[touched], t1[touched], atol=1e-6)
+    assert np.all(y[~touched] == 0)
+
+
 def test_queue_stats_recorded():
     eng = TaskEngine(EngineConfig(grid=TileGrid(4, 4)), 64)
     dst = np.zeros(100, np.int64)            # all to tile 0 -> hotspot

@@ -23,8 +23,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import EngineConfig, TaskEngine, TileGrid
+from repro.core import EngineConfig, QueueConfig, TaskEngine, TileGrid
 from repro.costmodel.silicon import die_cost_usd, murphy_yield
+from repro.dse import compare as dse_compare
+from repro.dse.driver import SweepTask, run_sweep
 from repro.dse.evaluate import Evaluator
 from repro.dse.pareto import dominates, pareto_frontier, pareto_indices
 from repro.dse.space import ConfigSpace, DesignPoint
@@ -118,6 +120,26 @@ def test_design_point_round_trips_and_rejects_bad_axes():
         DesignPoint(mem_tech="optane")
 
 
+def test_moe_capacity_factor_is_the_iq_axis():
+    """The MoE dispatch knob is a ConfigSpace axis and resolves through
+    the same QueueConfig path the kernel uses (no parallel knob)."""
+    from types import SimpleNamespace
+    from repro.core.dispatch import dispatch_queues
+
+    p = DesignPoint(moe_capacity_factor=1.0)
+    kernel_q = dispatch_queues(SimpleNamespace(capacity_factor=1.0))
+    for task, tasks, chans in (("dispatch", 4096 * 8, 8),
+                               ("portal", 1024, 2), ("expert", 640, 4)):
+        assert (p.moe_queues().channel_cap(task, tasks, chans)
+                == kernel_q.channel_cap(task, tasks, chans))
+    # swept like any other compile-time axis, with distinct identities
+    pts = list(ConfigSpace.quick().points())
+    pts2 = list(ConfigSpace(**{**ConfigSpace.quick().to_dict(),
+                               "moe_capacity_factors": (1.0, 1.25)}).points())
+    assert len(pts2) == 2 * len(pts)
+    assert len({q.point_id for q in pts2}) == len(pts2)
+
+
 def test_full_space_covers_every_topology_and_mem_tech():
     pts = list(ConfigSpace.full().points())
     assert {p.topology for p in pts} == {"mesh", "torus", "hier_torus"}
@@ -149,23 +171,153 @@ def test_evaluator_reprices_cached_stats_across_width_and_mem():
 
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), cap=st.sampled_from([1, 8, 16]),
-       T=st.sampled_from([2, 4, 8]))
-def test_engine_drop_count_matches_channel_overflow(seed, cap, T):
+       T=st.sampled_from([2, 4, 8]),
+       self_heavy=st.booleans())
+def test_engine_drop_count_matches_channel_overflow(seed, cap, T,
+                                                    self_heavy):
+    """Analytic drops == per-channel overflow, INCLUDING same-tile
+    (src == dst) channels — the shard_map bucket queues self-owned tasks
+    through its own bucket at the same capacity, so the analytic model
+    must charge them too (heavy self-traffic stream exercises exactly
+    those channels)."""
     rng = np.random.default_rng(seed)
     n = 64
     src = rng.integers(0, n, 300)
-    dst = rng.integers(0, n, 300)
-    engine = TaskEngine(EngineConfig(grid=TileGrid(1, T)), n,
-                        iq_capacity=cap)
+    if self_heavy:
+        # ~90% of tasks stay on their own tile: dst ≡ src (mod T)
+        dst = np.where(rng.random(300) < 0.9,
+                       src, rng.integers(0, n, 300))
+    else:
+        dst = rng.integers(0, n, 300)
+    engine = TaskEngine(EngineConfig(grid=TileGrid(1, T),
+                                     queues=QueueConfig(default_iq=cap)), n)
     rs = engine.route("T3", src_idx=src, dst_idx=dst)
     chan = {}
     for s, d in zip(src % T, dst % T):
         chan[(s, d)] = chan.get((s, d), 0) + 1
     want = sum(max(c - cap, 0) for c in chan.values())
     assert rs.drops == want
-    # per-call override beats the constructor default
-    rs2 = engine.route("T3", src_idx=src, dst_idx=dst, iq_capacity=10**9)
-    assert rs2.drops == 0
+    if self_heavy and cap == 1 and T <= 4:
+        assert rs.drops > 0          # self channels really did overflow
+    # per-task sizing beats the default — QueueConfig is the only source
+    engine2 = TaskEngine(EngineConfig(
+        grid=TileGrid(1, T),
+        queues=QueueConfig(default_iq=cap, iq_sizes={"T3": 10**9})), n)
+    assert engine2.route("T3", src_idx=src, dst_idx=dst).drops == 0
+    # unbounded config restores the legacy no-drop stats
+    engine3 = TaskEngine(EngineConfig(grid=TileGrid(1, T),
+                                      queues=QueueConfig.unbounded()), n)
+    assert engine3.route("T3", src_idx=src, dst_idx=dst).drops == 0
+
+
+def test_factor_based_queueconfig_bounds_the_analytic_model():
+    """A relative (capacity-factor) QueueConfig must bound route() too —
+    not silently fall back to unbounded while the executables drop: both
+    paths resolve through channel_cap."""
+    rng = np.random.default_rng(7)
+    T, n, n_tasks = 4, 64, 300
+    src = rng.integers(0, n, n_tasks)
+    dst = np.zeros(n_tasks, np.int64)            # hotspot owner tile
+    queues = QueueConfig.from_factor(0.25)
+    engine = TaskEngine(EngineConfig(grid=TileGrid(1, T), queues=queues), n)
+    rs = engine.route("T3", src_idx=src, dst_idx=dst)
+    cap = queues.channel_cap("T3", -(-n_tasks // T), T)
+    assert cap is not None
+    chan = {}
+    for s, d in zip(src % T, dst % T):
+        chan[(s, d)] = chan.get((s, d), 0) + 1
+    assert rs.drops == sum(max(c - cap, 0) for c in chan.values()) > 0
+    # and the accessors agree on what "no explicit entry" means
+    assert queues.iq("T3") is None               # no fixed entry count
+
+
+# ---------------------------------------------------------------------------
+# Part A: resumable sweep driver — error records resume correctly
+# ---------------------------------------------------------------------------
+
+def _flaky_tasks(calls, fail_keys=()):
+    def make(key):
+        def run():
+            calls.append(key)
+            if key in fail_keys:
+                raise RuntimeError(f"boom {key}")
+            return {"value": key.upper()}
+        return SweepTask(key=key, run=run, meta={"m": 1})
+    return [make(k) for k in ("a", "b", "c")]
+
+
+def test_error_records_carry_their_task_key(tmp_path):
+    out = str(tmp_path / "sweep.json")
+    calls = []
+    results = run_sweep(_flaky_tasks(calls, fail_keys=("b",)), out=out)
+    by_key = {r["task_key"]: r for r in results}
+    assert set(by_key) == {"a", "b", "c"}
+    assert "error" in by_key["b"] and by_key["b"]["m"] == 1
+
+
+def test_resume_does_not_rerun_errored_points_by_default(tmp_path):
+    out = str(tmp_path / "sweep.json")
+    calls = []
+    run_sweep(_flaky_tasks(calls, fail_keys=("b",)), out=out)
+    assert calls == ["a", "b", "c"]
+    # resume: nothing re-runs, no duplicate records accumulate
+    results = run_sweep(_flaky_tasks(calls, fail_keys=("b",)), out=out)
+    assert calls == ["a", "b", "c"]
+    assert len(results) == 3
+
+
+def test_retry_errors_reruns_only_failures_without_duplicates(tmp_path):
+    out = str(tmp_path / "sweep.json")
+    calls = []
+    run_sweep(_flaky_tasks(calls, fail_keys=("b",)), out=out)
+    results = run_sweep(_flaky_tasks(calls), out=out, retry_errors=True)
+    assert calls == ["a", "b", "c", "b"]      # only the failure re-ran
+    assert len(results) == 3                  # stale error record replaced
+    by_key = {r["task_key"]: r for r in results}
+    assert by_key["b"]["value"] == "B" and "error" not in by_key["b"]
+
+
+# ---------------------------------------------------------------------------
+# Part A: frontier trajectory comparison (the nightly regression gate)
+# ---------------------------------------------------------------------------
+
+def _bench_with(points):
+    return {"schema": "dcra-dse-bench/v1",
+            "points": [{"point_id": pid, "pareto": True,
+                        "metrics": {"teps_geomean": t, "watts_geomean": w,
+                                    "package_usd": c,
+                                    "teps_per_usd": t / c}}
+                       for pid, t, w, c in points]}
+
+
+def test_compare_accepts_improvement_and_drift():
+    old = _bench_with([("p1", 100.0, 5.0, 40.0)])
+    new = _bench_with([("p2", 120.0, 4.0, 35.0)])   # new ids, all better
+    failures, notes = dse_compare.compare(old, new, tol=0.05)
+    assert not failures
+    assert any("drift" in n for n in notes)
+
+
+def test_compare_flags_objective_best_regression():
+    old = _bench_with([("p1", 100.0, 5.0, 40.0)])
+    new = _bench_with([("p1", 80.0, 5.0, 40.0)])    # -20% teps
+    failures, _ = dse_compare.compare(old, new, tol=0.05)
+    assert failures and any("teps" in f for f in failures)
+    # within tolerance passes
+    ok, _ = dse_compare.compare(old, _bench_with([("p1", 97.0, 5.0, 40.0)]),
+                                tol=0.05)
+    assert not ok
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    old_p, new_p = str(tmp_path / "old.json"), str(tmp_path / "new.json")
+    with open(old_p, "w") as f:
+        json.dump(_bench_with([("p1", 100.0, 5.0, 40.0)]), f)
+    with open(new_p, "w") as f:
+        json.dump(_bench_with([("p1", 50.0, 5.0, 40.0)]), f)
+    assert dse_compare.main([old_p, new_p]) == 2
+    assert dse_compare.main([old_p, old_p]) == 0
+    assert dse_compare.main([old_p, str(tmp_path / "nope.json")]) == 1
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +328,7 @@ def test_engine_drop_count_matches_channel_overflow(seed, cap, T):
 def shardcheck_results():
     spec = {"n_dev": 8, "scale": 8, "seed": 0,
             "checks": [{"point_id": f"iq{iq}", "iq_capacity": iq,
-                        "apps": ["spmv", "histogram"]}
+                        "apps": ["spmv", "histogram", "histogram_self"]}
                        for iq in (8, 64)]}
     out = subprocess.run(
         [sys.executable, "-m", "repro.dse.shardcheck"],
@@ -189,7 +341,7 @@ def shardcheck_results():
 
 
 def test_shardcheck_agrees_for_swept_capacities(shardcheck_results):
-    assert len(shardcheck_results) == 4          # 2 caps x 2 apps
+    assert len(shardcheck_results) == 6          # 2 caps x 3 apps
     for r in shardcheck_results:
         assert r["ok"], r
         assert r["executable"] == r["analytic"]
@@ -199,6 +351,17 @@ def test_shardcheck_exercises_the_overflow_path(shardcheck_results):
     """Tight queues must actually drop, or the agreement is vacuous."""
     tight = [r for r in shardcheck_results if r["cap"] == 8]
     assert tight and all(r["analytic"]["drops"] > 0 for r in tight)
+
+
+def test_shardcheck_covers_heavy_self_traffic(shardcheck_results):
+    """The same-tile (src == dst) channels must overflow and agree: the
+    analytic model charges self channels because the executable bucket
+    queues self-owned tasks at the same capacity (drop parity by
+    construction, not by coincidence)."""
+    selfs = [r for r in shardcheck_results if r["app"] == "histogram_self"]
+    assert len(selfs) == 2
+    assert all(r["ok"] for r in selfs)
+    assert any(r["analytic"]["drops"] > 0 for r in selfs)
 
 
 # ---------------------------------------------------------------------------

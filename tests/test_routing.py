@@ -84,7 +84,7 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import json
 import numpy as np
 import jax
-from repro.core import EngineConfig, TaskEngine, TileGrid
+from repro.core import EngineConfig, QueueConfig, TaskEngine, TileGrid
 from repro.core.compat import make_mesh
 from repro.sparse.jax_apps import dcra_scatter, from_owner_layout
 
@@ -130,12 +130,15 @@ for n_dev in (1, 2, 4, 8):
                 capacity_factor=cf)
             y = np.asarray(from_owner_layout(y_sh, n, n_dev), np.float64)
             want, want_drops = oracle(dest, vals, n, n_dev, cap, op)
-            # analytic twin: same stream through TaskEngine.route
-            engine = TaskEngine(EngineConfig(grid=TileGrid(1, n_dev)), n)
+            # analytic twin: same stream through TaskEngine.route, the
+            # capacity flowing through QueueConfig (the only IQ source)
+            engine = TaskEngine(EngineConfig(
+                grid=TileGrid(1, n_dev),
+                queues=QueueConfig(default_iq=cap)), n)
             valid = dest >= 0
             shard_of = np.repeat(np.arange(n_dev), e_local)
             rs = engine.route('T3', src_idx=shard_of[valid],
-                              dst_idx=dest[valid], iq_capacity=cap)
+                              dst_idx=dest[valid])
             cases.append({
                 'desc': f'n_dev={n_dev} op={op} seed={seed} cf={cf}',
                 'max_err': float(np.max(np.abs(np.where(
