@@ -31,8 +31,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map_unchecked
-from ..core.routing import (owner_route, owner_route_hier, reduce_received,
-                            round8)
+from ..core.queues import QueueConfig
+from ..core.routing import owner_route, owner_route_hier, reduce_received
 from ..core.task_engine import RoundStats, RunStats
 from .csr import CSR
 
@@ -118,7 +118,8 @@ def _axis_sizes(mesh):
 
 def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
                  capacity_factor: float = 1.5, pod_axis=None,
-                 cap: Optional[int] = None):
+                 cap: Optional[int] = None,
+                 queues: Optional[QueueConfig] = None, task: str = "T3"):
     """Owner-routed scatter-reduce: one NoC round.
 
     dest/vals: [E] sharded over the device axes (edge-parallel tasks);
@@ -130,22 +131,30 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     (paper §III-A): stage 1 aggregates at the per-pod portal over ``axis``
     (tile-NoC), stage 2 crosses pods exactly once (die-NoC).
 
-    ``cap`` pins the per-(source shard → owner) input-queue capacity
-    directly, honored exactly (flat path only — the DSE revalidation
-    sweeps the IQ axis in queue entries, so rounding it would validate a
-    different capacity than the analytic model swept); the default
-    derived from ``capacity_factor`` keeps the lane-aligned round8.
+    Queue sizing resolves through ONE path — :class:`QueueConfig` — like
+    everywhere else in the repo. ``queues`` names the per-``task`` IQ
+    directly; the legacy ``cap=`` / ``capacity_factor=`` kwargs are sugar
+    for ``QueueConfig.from_cap`` / ``QueueConfig.from_factor`` overrides.
+    Explicit capacities are honored exactly (flat path only — the DSE
+    revalidation sweeps the IQ axis in queue entries, so rounding would
+    validate a different capacity than the analytic model swept);
+    factor-derived capacities keep the lane-aligned round8.
     """
     n_dev = mesh.devices.size
     e_local = dest.shape[0] // n_dev
     n_local = -(-n // n_dev)
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
-    if cap is not None and pod_axis is not None:
+    if queues is None:
+        queues = (QueueConfig.from_cap(cap, task) if cap is not None
+                  else QueueConfig.from_factor(capacity_factor, task))
+    explicit = queues.iq_sizes.get(task, None)
+    if explicit is not None and pod_axis is not None:
         raise ValueError("explicit cap is only defined for the flat path")
 
     if pod_axis is None:
-        if cap is None:
-            cap = round8(int(e_local * capacity_factor / n_dev))
+        cap = queues.channel_cap(task, e_local, n_dev)
+        if cap is None:          # unbounded -> every local task can fit
+            cap = max(1, e_local)
         cap = max(1, int(cap))
 
         def kernel(dest_b, vals_b):
@@ -159,8 +168,10 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     else:
         sizes = _axis_sizes(mesh)
         n_intra, n_pods = sizes[axis], sizes[pod_axis]
-        cap1 = round8(int(e_local * capacity_factor / n_intra))
-        cap2 = round8(int(n_intra * cap1 * capacity_factor / n_pods))
+        cap1 = queues.channel_cap(task, e_local, n_intra)
+        cap1 = max(1, e_local) if cap1 is None else cap1
+        cap2 = queues.channel_cap(task, n_intra * cap1, n_pods)
+        cap2 = max(1, n_intra * cap1) if cap2 is None else cap2
 
         def kernel(dest_b, vals_b):
             valid = dest_b >= 0
@@ -173,6 +184,33 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
 
     return shard_map_unchecked(kernel, mesh=mesh, in_specs=(spec, spec),
                                out_specs=(spec, P()))(dest, vals)
+
+
+def _resolve_launch(config, g, app, objective="teps", kwargs_set=()):
+    """Resolve an app's ``config=`` kwarg to a ``LaunchConfig`` (or None).
+
+    ``"auto"`` runs the Pareto-guided selection in
+    :mod:`repro.dse.autoconfig`; a ``LaunchConfig`` passes through; a
+    ``DesignPoint`` is wrapped as an explicit choice. ``None`` keeps the
+    legacy kwarg-driven sizing. ``kwargs_set`` names explicitly-passed
+    sizing kwargs — combining those with ``config=`` is an error, not a
+    silent override.
+    """
+    if config is None:
+        return None
+    if kwargs_set:
+        raise ValueError(f"config= conflicts with explicit {kwargs_set}: "
+                         f"queue sizing comes from the resolved "
+                         f"LaunchConfig, drop one of them")
+    from ..dse.autoconfig import LaunchConfig, autoconfigure, launch_for
+    if isinstance(config, str):
+        if config != "auto":
+            raise ValueError(f"unknown config {config!r} (expected 'auto', "
+                             f"a LaunchConfig or a DesignPoint)")
+        return autoconfigure(g, app, objective=objective)
+    if isinstance(config, LaunchConfig):
+        return config
+    return launch_for(config, g, objective=objective)
 
 
 def owner_layout(arr_n, n_dev):
@@ -247,27 +285,57 @@ def histogram_task_stream(elements: np.ndarray, n_dev: int
 
 
 def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
-              capacity_factor: float = 2.0, seed: int = 0, pod_axis=None,
-              cap: Optional[int] = None):
-    """Distributed y = A @ x via one owner-routed round."""
+              capacity_factor: Optional[float] = None, seed: int = 0,
+              pod_axis=None, cap: Optional[int] = None, config=None,
+              objective="teps"):
+    """Distributed y = A @ x via one owner-routed round.
+
+    ``config="auto"`` resolves pod/portal routing and the per-task IQ
+    sizing from the tracked Pareto frontier (see
+    :mod:`repro.dse.autoconfig`) instead of the kwargs (combining the
+    two raises). ``capacity_factor`` defaults to 2.0.
+    """
+    lc = _resolve_launch(config, g, "spmv", objective,
+                         kwargs_set=[k for k, v in
+                                     (("capacity_factor", capacity_factor),
+                                      ("cap", cap)) if v is not None])
+    if capacity_factor is None:
+        capacity_factor = 2.0
     n_dev = mesh.devices.size
     dest, vals_eff = spmv_task_stream(g, x, n_dev, seed)
+    queues = None
+    if lc is not None:
+        pod_axis = pod_axis if pod_axis is not None else lc.pod_axis_for(mesh)
+        queues = lc.device_queues(n_dev, len(dest) // n_dev,
+                                  pod=pod_axis is not None)
     y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals_eff),
                                  g.n, mesh, axis,
                                  op="add", capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis, cap=cap)
+                                 pod_axis=pod_axis, cap=cap, queues=queues)
     return from_owner_layout(y_sh, g.n, n_dev), dropped
 
 
 def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
-                   capacity_factor: float = 2.0, pod_axis=None,
-                   cap: Optional[int] = None):
+                   capacity_factor: Optional[float] = None, pod_axis=None,
+                   cap: Optional[int] = None, config=None,
+                   objective="teps"):
+    lc = _resolve_launch(config, elements, "histogram", objective,
+                         kwargs_set=[k for k, v in
+                                     (("capacity_factor", capacity_factor),
+                                      ("cap", cap)) if v is not None])
+    if capacity_factor is None:
+        capacity_factor = 2.0
     n_dev = mesh.devices.size
     dest, ones = histogram_task_stream(elements, n_dev)
+    queues = None
+    if lc is not None:
+        pod_axis = pod_axis if pod_axis is not None else lc.pod_axis_for(mesh)
+        queues = lc.device_queues(n_dev, len(dest) // n_dev,
+                                  pod=pod_axis is not None)
     y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(ones),
                                  n_bins, mesh, axis, op="add",
                                  capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis, cap=cap)
+                                 pod_axis=pod_axis, cap=cap, queues=queues)
     return from_owner_layout(y_sh, n_bins, n_dev), dropped
 
 
@@ -314,16 +382,21 @@ def _graph_setup(g: CSR, mesh, undirected=False, seed=0):
 
 def _frontier_min_app(g: CSR, mesh, dist0_np, *, value, axis="data",
                       capacity_factor: float = 4.0, max_rounds: int = 128,
-                      undirected: bool = False, seed: int = 0):
+                      undirected: bool = False, seed: int = 0,
+                      launch=None):
     """Shared driver for BFS / SSSP / WCC: frontier-driven scatter-min
     rounds inside ONE lax.while_loop under shard_map.
 
     ``value`` chooses the per-edge task payload: 'hops' (dist+1), 'weight'
-    (dist+w), or 'label' (dist itself).
+    (dist+w), or 'label' (dist itself). ``launch`` (a resolved
+    ``LaunchConfig``) overrides the IQ sizing through ``QueueConfig``.
     """
     n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(
         g, mesh, undirected=undirected, seed=seed)
-    cap = round8(int(E_max * capacity_factor / n_dev))
+    queues = (launch.device_queues(n_dev, E_max) if launch is not None
+              else QueueConfig.from_factor(capacity_factor))
+    cap = queues.channel_cap("T3", E_max, n_dev)
+    cap = max(1, E_max) if cap is None else min(cap, max(1, E_max))
     dist0, _ = _owner_pack_np(dist0_np.astype(np.float64), n_dev, np.inf)
     dist0 = jnp.asarray(dist0, jnp.float32)
 
@@ -375,52 +448,83 @@ def _frontier_min_app(g: CSR, mesh, dist0_np, *, value, axis="data",
     return dist_np, _collect_stats(r, msgs, drops)
 
 
+def _cf_kwargs_set(capacity_factor):
+    return ["capacity_factor"] if capacity_factor is not None else []
+
+
 def dcra_bfs(g: CSR, root: int, mesh, axis="data",
-             capacity_factor: float = 4.0, max_rounds: int = 128,
-             seed: int = 0) -> Tuple[np.ndarray, AppStats]:
-    """Distributed BFS: hop count from root, -1 if unreachable."""
+             capacity_factor: Optional[float] = None, max_rounds: int = 128,
+             seed: int = 0, config=None, objective="teps"
+             ) -> Tuple[np.ndarray, AppStats]:
+    """Distributed BFS: hop count from root, -1 if unreachable.
+
+    ``config="auto"`` picks the deployment (grid, topology, IQ sizing)
+    from the tracked Pareto frontier for this graph + objective;
+    ``capacity_factor`` (default 4.0) is the manual alternative —
+    passing both raises.
+    """
+    lc = _resolve_launch(config, g, "bfs", objective,
+                         kwargs_set=_cf_kwargs_set(capacity_factor))
+    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
     dist0 = np.full(g.n, np.inf)
     dist0[root] = 0.0
     d, stats = _frontier_min_app(g, mesh, dist0, value="hops", axis=axis,
                                  capacity_factor=capacity_factor,
-                                 max_rounds=max_rounds, seed=seed)
+                                 max_rounds=max_rounds, seed=seed,
+                                 launch=lc)
     return np.where(np.isfinite(d), d, -1).astype(np.int64), stats
 
 
 def dcra_sssp(g: CSR, root: int, mesh, axis="data",
-              capacity_factor: float = 4.0, max_rounds: int = 256,
-              seed: int = 0) -> Tuple[np.ndarray, AppStats]:
+              capacity_factor: Optional[float] = None, max_rounds: int = 256,
+              seed: int = 0, config=None, objective="teps"
+              ) -> Tuple[np.ndarray, AppStats]:
     """Distributed SSSP (frontier Bellman-Ford): inf if unreachable."""
+    lc = _resolve_launch(config, g, "sssp", objective,
+                         kwargs_set=_cf_kwargs_set(capacity_factor))
+    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
     dist0 = np.full(g.n, np.inf)
     dist0[root] = 0.0
     d, stats = _frontier_min_app(g, mesh, dist0, value="weight", axis=axis,
                                  capacity_factor=capacity_factor,
-                                 max_rounds=max_rounds, seed=seed)
+                                 max_rounds=max_rounds, seed=seed,
+                                 launch=lc)
     return d.astype(np.float64), stats
 
 
-def dcra_wcc(g: CSR, mesh, axis="data", capacity_factor: float = 4.0,
-             max_rounds: int = 128, seed: int = 0
-             ) -> Tuple[np.ndarray, AppStats]:
+def dcra_wcc(g: CSR, mesh, axis="data",
+             capacity_factor: Optional[float] = None,
+             max_rounds: int = 128, seed: int = 0, config=None,
+             objective="teps") -> Tuple[np.ndarray, AppStats]:
     """Distributed WCC via min-label propagation over both edge directions."""
     if g.n > (1 << 24):
         # labels ride the f32 NoC payload; ids above 2^24 would collide
         raise ValueError(f"dcra_wcc supports up to 2^24 vertices, got {g.n}")
+    lc = _resolve_launch(config, g, "wcc", objective,
+                         kwargs_set=_cf_kwargs_set(capacity_factor))
+    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
     label0 = np.arange(g.n, dtype=np.float64)
     lab, stats = _frontier_min_app(g, mesh, label0, value="label", axis=axis,
                                    capacity_factor=capacity_factor,
                                    max_rounds=max_rounds, undirected=True,
-                                   seed=seed)
+                                   seed=seed, launch=lc)
     return lab.astype(np.int64), stats
 
 
 def dcra_pagerank(g: CSR, mesh, damping: float = 0.85, iters: int = 20,
-                  axis="data", capacity_factor: float = 4.0, seed: int = 0
+                  axis="data", capacity_factor: Optional[float] = None,
+                  seed: int = 0, config=None, objective="teps"
                   ) -> Tuple[np.ndarray, AppStats]:
     """Distributed PageRank: ``iters`` owner-routed epochs (fori_loop),
     dangling mass redistributed uniformly each epoch (matches the oracle)."""
+    lc = _resolve_launch(config, g, "pagerank", objective,
+                         kwargs_set=_cf_kwargs_set(capacity_factor))
+    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
     n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(g, mesh, seed=seed)
-    cap = round8(int(E_max * capacity_factor / n_dev))
+    queues = (lc.device_queues(n_dev, E_max) if lc is not None
+              else QueueConfig.from_factor(capacity_factor))
+    cap = queues.channel_cap("T3", E_max, n_dev)
+    cap = max(1, E_max) if cap is None else min(cap, max(1, E_max))
     n = g.n
     deg, vvalid = _owner_pack_np(g.degrees().astype(np.float64), n_dev, 0.0)
     deg = jnp.asarray(deg, jnp.float32)
