@@ -30,7 +30,8 @@ import numpy as np   # noqa: E402
 from repro.core import EngineConfig, TaskEngine, TileGrid   # noqa: E402
 from repro.core.compat import make_mesh                      # noqa: E402
 from repro.sparse import datasets, ref                       # noqa: E402
-from repro.sparse.jax_apps import dcra_histogram, dcra_spmv  # noqa: E402
+from repro.sparse.jax_apps import (dcra_bfs, dcra_histogram,  # noqa: E402
+                                   dcra_spmv)
 
 from .common import emit                                     # noqa: E402
 
@@ -56,6 +57,11 @@ def die_crossings(dest, n_dev, n_pods):
     return rs.die_crossings
 
 
+def _bfs_stats(g, mesh, **kw):
+    d, st = dcra_bfs(g, 0, mesh, capacity_factor=4.0, **kw)
+    return d.astype(np.float64), st.total_drops
+
+
 def main(scale: int = 11, n_dev: int = 8, n_pods: int = 2):
     flat = make_mesh((n_dev,), ("data",))
     hier = make_mesh((n_pods, n_dev // n_pods), ("pod", "data"))
@@ -75,6 +81,12 @@ def main(scale: int = 11, n_dev: int = 8, n_pods: int = 2):
          lambda: dcra_histogram(els, 1 << 10, hier, pod_axis="pod",
                                 capacity_factor=3.0),
          ref.histogram_ref(els, 1 << 10)),
+        # iterative TaskPrograms route hierarchically too: every
+        # while_loop round re-enters the two-stage pod/portal collective
+        ("bfs",
+         lambda: _bfs_stats(g, flat),
+         lambda: _bfs_stats(g, hier, pod_axis="pod"),
+         ref.bfs_ref(g, 0).astype(np.float64)),
     ):
         for mode, fn in (("single_stage", fn_flat), ("hierarchical", fn_hier)):
             ms, drops, y = _timed(fn)

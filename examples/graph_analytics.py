@@ -1,11 +1,13 @@
-"""Graph analytics on the DCRA task engine: all six paper apps on one
-dataset, with the paper's target metrics (TEPS, TEPS/W, TEPS/$) and the
-design-space comparison the paper advocates (SRAM-only vs HBM packaging).
+"""Graph analytics on the DCRA task engine: all seven apps (the paper's
+six + k-core) on one dataset, with the paper's target metrics (TEPS,
+TEPS/W, TEPS/$) and the design-space comparison the paper advocates
+(SRAM-only vs HBM packaging).
 
-``--distributed`` additionally runs all six apps on the REAL distributed
-shard_map path (8 fake host devices) through the shared owner-routed NoC
-layer in ``repro.core.routing``, validating each against its numpy oracle
-and printing per-app rounds / routed messages / IQ drops.
+``--distributed`` additionally runs every app on the REAL distributed
+shard_map path (8 fake host devices) as a TaskProgram through the shared
+owner-routed NoC layer in ``repro.core.routing``, validating each against
+its numpy oracle and printing per-app rounds / routed messages / IQ
+drops.
 
   PYTHONPATH=src python examples/graph_analytics.py [--scale 12]
       [--distributed]
@@ -33,11 +35,12 @@ from benchmarks.common import config_cost, evaluate, APPS  # noqa: E402
 
 
 def run_distributed(g, scale):
-    """All six apps on the shard_map path; oracle-checked, stats printed."""
+    """All seven apps on the shard_map path; oracle-checked, stats
+    printed."""
     from repro.core.compat import make_mesh
     from repro.sparse.jax_apps import (dcra_bfs, dcra_histogram,
-                                       dcra_pagerank, dcra_spmv, dcra_sssp,
-                                       dcra_wcc)
+                                       dcra_kcore, dcra_pagerank,
+                                       dcra_spmv, dcra_sssp, dcra_wcc)
     mesh = make_mesh((8,), ("data",))
     x = np.random.default_rng(0).random(g.n)
     els = datasets.histogram_data(1 << 14, 256)
@@ -70,6 +73,8 @@ def run_distributed(g, scale):
     row("pagerank", p, ref.pagerank_ref(g), st)
     w, st = dcra_wcc(g, mesh)
     row("wcc", w, ref.wcc_ref(g), st)
+    k, st = dcra_kcore(g, 16, mesh)
+    row("kcore", k, ref.kcore_ref(g, 16), st)
     print()
 
     # Pareto-guided launch: pick the deployment from the tracked frontier

@@ -37,6 +37,42 @@ from .queues import round8  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
+# per-round capacity resolution (shared by every routing call site)
+# ---------------------------------------------------------------------------
+
+def resolve_flat_cap(queues, task: str, e_local: int, n_shards: int,
+                     clamp: bool = False) -> int:
+    """One flat routing round's per-channel bucket capacity.
+
+    Resolves through :meth:`QueueConfig.channel_cap` (the single IQ
+    source of truth). ``None`` (unbounded) resolves to ``e_local`` — every
+    local task fits its owner bucket. ``clamp=True`` additionally trims an
+    explicit capacity at ``e_local``: a shard can never send more than its
+    whole slice to one owner, so the clamp only shrinks the *allocation*
+    (the receive buffer), never the admission behaviour — drop counts are
+    identical either way, which is what keeps the analytic twin exact.
+    """
+    cap = queues.channel_cap(task, e_local, n_shards)
+    if cap is None:
+        cap = max(1, e_local)
+    elif clamp:
+        cap = min(int(cap), max(1, e_local))
+    return max(1, int(cap))
+
+
+def resolve_hier_caps(queues, task: str, e_local: int, n_intra: int,
+                      n_pods: int) -> Tuple[int, int]:
+    """Stage-1 (tile-NoC) / stage-2 (die-NoC portal) capacities for the
+    pod/portal path. Stage 2 sizes from stage 1's worst-case egress
+    (``n_intra * cap1`` tasks can land on one portal)."""
+    cap1 = queues.channel_cap(task, e_local, n_intra)
+    cap1 = max(1, e_local) if cap1 is None else int(cap1)
+    cap2 = queues.channel_cap(task, n_intra * cap1, n_pods)
+    cap2 = max(1, n_intra * cap1) if cap2 is None else int(cap2)
+    return cap1, cap2
+
+
+# ---------------------------------------------------------------------------
 # bucketing (the bounded IQ)
 # ---------------------------------------------------------------------------
 

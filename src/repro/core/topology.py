@@ -102,7 +102,23 @@ class TileGrid:
         return self.bisection_links() * self.noc_width_bits / 8.0
 
     def avg_uniform_hops(self) -> float:
-        """Mean hops under uniform random traffic (closed form)."""
+        """Mean hops under uniform random traffic.
+
+        Exact closed form for the flat topologies (per-axis expectation of
+        the distance between two independent uniform coordinates, summed
+        over the two axes): mesh ``E|a-b| = (n^2-1)/(3n)``; torus
+        ``E[min(d, n-d)] = n/4`` (even ``n``) or ``(n^2-1)/(4n)`` (odd).
+        ``hier_torus`` has no simple closed form (the portal detour makes
+        the axes non-separable), so it stays a seeded Monte-Carlo sample.
+        """
+        if self.topology == "mesh":
+            def axis(n):
+                return (n * n - 1) / (3.0 * n)
+            return axis(self.rows) + axis(self.cols)
+        if self.topology == "torus":
+            def axis(n):
+                return n / 4.0 if n % 2 == 0 else (n * n - 1) / (4.0 * n)
+            return axis(self.rows) + axis(self.cols)
         n = 4096
         rng = np.random.default_rng(0)
         s = rng.integers(0, self.n_tiles, n)

@@ -11,7 +11,7 @@ already has into that loop:
 * :mod:`repro.dse.space`     — declarative ``ConfigSpace`` / ``DesignPoint``
   over the three configuration axes;
 * :mod:`repro.dse.evaluate`  — ``Evaluator``: analytic evaluation of a point
-  for the six paper apps × bundled datasets (stats cached across points that
+  for the seven apps × bundled datasets (stats cached across points that
   share the simulation-relevant sub-key, the paper's decoupled re-pricing);
 * :mod:`repro.dse.pareto`    — n-dimensional Pareto frontier extraction;
 * :mod:`repro.dse.driver`    — generic resumable sweep driver (also the
@@ -28,8 +28,9 @@ already has into that loop:
   regression gate between successive ``BENCH_dse.json`` artifacts.
 """
 from .autoconfig import (BASELINE, DatasetSignature,            # noqa: F401
-                         LaunchConfig, autoconfigure, launch_for,
-                         signature_of)
+                         DispatchLoadSignature, LaunchConfig,
+                         autoconfigure, autoconfigure_moe, launch_for,
+                         moe_dispatch_signature, signature_of)
 from .evaluate import (APPS, ConfigResult, Evaluator, PointResult,  # noqa: F401
                        config_cost, evaluate, geomean, load_datasets,
                        run_app)

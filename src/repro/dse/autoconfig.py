@@ -28,7 +28,11 @@ Selection pipeline:
 The resulting :class:`LaunchConfig` resolves everything the executables
 need — deployment grid, pod/portal topology, and per-task IQ capacities as
 :class:`~repro.core.queues.QueueConfig` overrides (the single source of
-queue truth). The six ``dcra_*`` apps accept ``config="auto"``.
+queue truth). All seven ``dcra_*`` apps accept ``config="auto"`` (the
+TaskProgram runtime resolves it), ranked on the app-specific Pareto
+slice when the bench records one (schema v2 ``app_frontiers``); and
+:func:`autoconfigure_moe` picks the MoE dispatch capacity factor from a
+dispatch-load signature.
 """
 from __future__ import annotations
 
@@ -174,7 +178,15 @@ def bench_signatures(bench: Dict) -> Dict[str, DatasetSignature]:
             if k in set(bench.get("datasets", data))}
 
 
-def frontier_records(bench: Dict) -> List[Dict]:
+def frontier_records(bench: Dict, app: Optional[str] = None) -> List[Dict]:
+    """Frontier candidates for ``app``: the app-specific Pareto slice when
+    the bench records one (schema v2 ``app_frontiers``), else the global
+    (TEPS, watts, $/pkg) frontier — v1 files and un-swept apps fall back
+    gracefully."""
+    slice_ids = set(bench.get("app_frontiers", {}).get(app or "", ()))
+    if slice_ids:
+        return [r for r in bench.get("points", [])
+                if r.get("point_id") in slice_ids and "metrics" in r]
     return [r for r in bench.get("points", [])
             if r.get("pareto") and "metrics" in r]
 
@@ -277,12 +289,14 @@ def launch_for(point: DesignPoint, g=None,
 def select_from_frontier(bench: Dict, sig: DatasetSignature, app: str,
                          weights: Sequence[Tuple[str, float]]
                          ) -> Optional[Tuple[DesignPoint, float, float]]:
-    """Best frontier point under the interpolated objective.
+    """Best frontier point under the interpolated objective, ranked on the
+    app-specific Pareto slice when the bench carries one (v2
+    ``app_frontiers``; the cross-app frontier otherwise).
 
     Returns (point, score, min_signature_distance) or None when the bench
     has no frontier. Deterministic: ties break on point_id.
     """
-    records = frontier_records(bench)
+    records = frontier_records(bench, app)
     if not records:
         return None
     sigs = bench_signatures(bench)
@@ -347,7 +361,7 @@ def autoconfigure(g, app: str, objective: ObjectiveT = "teps",
     picked: Optional[Tuple[DesignPoint, float, float]] = None
     if bench is not None:
         frontier_pts = [DesignPoint.from_dict(r["config"])
-                        for r in frontier_records(bench)]
+                        for r in frontier_records(bench, app)]
         picked = select_from_frontier(bench, sig, app, weights)
 
     if picked is not None and picked[2] <= threshold:
@@ -369,3 +383,79 @@ def autoconfigure(g, app: str, objective: ObjectiveT = "teps",
             best_point, best_score = cand, s
     return LaunchConfig(point=best_point, source="mini-sweep",
                         objective=weights, signature=sig, score=best_score)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch auto-configuration (ROADMAP: pick moe_capacity_factor from
+# a dispatch-load signature)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DispatchLoadSignature:
+    """What the MoE capacity choice keys on: how skewed the router's
+    expert assignment is for a representative token batch."""
+    tokens: int
+    num_experts: int
+    peak_frac: float     # hottest expert's share of the assignments
+    cv: float            # coefficient of variation of per-expert load
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def moe_dispatch_signature(expert_ids, num_experts: int
+                           ) -> DispatchLoadSignature:
+    """Signature a sample of router assignments (flattened top-k expert
+    ids, e.g. ``eids.reshape(-1)`` from one batch)."""
+    ids = np.atleast_1d(np.asarray(expert_ids)).reshape(-1)
+    load = np.bincount(ids, minlength=num_experts).astype(np.float64)
+    total = max(load.sum(), 1.0)
+    mean = total / max(num_experts, 1)
+    return DispatchLoadSignature(
+        tokens=int(ids.size), num_experts=int(num_experts),
+        peak_frac=float(load.max(initial=0.0) / total),
+        cv=float(load.std() / mean) if mean > 0 else 0.0)
+
+
+# the swept moe_capacity_factor ladder (ConfigSpace values + headroom)
+MOE_FACTOR_LADDER = (1.0, 1.25, 1.5, 2.0, 3.0, 4.0)
+
+
+def autoconfigure_moe(expert_ids, num_experts: int, n_shards: int,
+                      ladder: Sequence[float] = MOE_FACTOR_LADDER
+                      ) -> Tuple[float, QueueConfig]:
+    """Pick ``moe_capacity_factor`` from a dispatch-load signature.
+
+    Simulates the stage-1 dispatch bucket on the sample — tokens sharded
+    as contiguous blocks over ``n_shards`` sender shards and experts
+    owned in contiguous blocks, both matching the ``moe_dcra`` layout
+    (``P(batch, seq)`` keeps neighbouring tokens on one shard, so
+    locally-correlated assignments concentrate on one sender's channel —
+    a round-robin model would hide exactly that hotspot) — and returns
+    the smallest ladder factor whose ``QueueConfig.for_moe_dispatch``
+    channel capacity admits every (sender → owner) channel without
+    overflow; if even the largest factor drops (pathological skew), the
+    drop-minimising factor wins. Deterministic; the returned
+    ``QueueConfig`` plugs straight into ``moe_dcra(..., queues=...)``.
+    """
+    ids = np.atleast_1d(np.asarray(expert_ids)).reshape(-1)
+    if not ids.size:
+        f = float(ladder[0])
+        return f, QueueConfig.for_moe_dispatch(f)
+    e_local = -(-num_experts // max(n_shards, 1))
+    block = -(-ids.size // n_shards)
+    sender = np.arange(ids.size) // block
+    owner = np.minimum(ids // e_local, n_shards - 1)
+    chan = np.bincount(sender * n_shards + owner,
+                       minlength=n_shards * n_shards)
+    t_local = -(-ids.size // n_shards)
+    best_f, best_drops = float(ladder[-1]), None
+    for f in ladder:
+        cap = QueueConfig.for_moe_dispatch(float(f)).channel_cap(
+            "dispatch", t_local, n_shards)
+        drops = int(np.maximum(chan - cap, 0).sum())
+        if best_drops is None or drops < best_drops:
+            best_f, best_drops = float(f), drops
+        if drops == 0:
+            break
+    return best_f, QueueConfig.for_moe_dispatch(best_f)

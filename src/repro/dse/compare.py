@@ -12,8 +12,16 @@ not on point identity (point-id formats may evolve across PRs):
   individually; a common point whose TEPS geomean regressed beyond the
   tolerance is a failure too (the same hardware point got slower — a
   model change, not a frontier shift);
+* **per-app frontier bests** (schema v2 ``app_frontiers``): when BOTH
+  files record app-specific Pareto slices, each common app's best slice
+  TEPS must not regress beyond the tolerance either; a file pair mixing
+  v1 and v2 skips this leg with a note (the nightly's previous artifact
+  may predate the slices);
 * structural drift (points only in one file, frontier size change) is
   reported but informational.
+
+Accepts both tracked schemas (``dcra-dse-bench/v1`` and ``/v2``) on
+either side.
 
 Exit codes: 0 ok; 1 bad input; 2 frontier regression.
 """
@@ -21,8 +29,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 from typing import Dict, List, Optional, Sequence, Tuple
+
+SCHEMAS = ("dcra-dse-bench/v1", "dcra-dse-bench/v2")
 
 # (name, metrics key, direction): the sweep's objective axes
 OBJECTIVE_BESTS: Tuple[Tuple[str, str, str], ...] = (
@@ -55,6 +66,30 @@ def _regressed(name: str, old: float, new: float, tol: float) -> bool:
     return new > old * (1.0 + tol)
 
 
+def app_bests(bench: Dict) -> Dict[str, float]:
+    """app -> best per-app TEPS geomean over that app's frontier slice
+    (empty when the bench predates schema v2's ``app_frontiers``)."""
+    fronts = bench.get("app_frontiers") or {}
+    by_id = {r["point_id"]: r for r in bench.get("points", [])
+             if "metrics" in r}
+    out: Dict[str, float] = {}
+    for app, pids in fronts.items():
+        vals = []
+        for pid in pids:
+            rec = by_id.get(pid)
+            if rec is None:
+                continue
+            cells = [c["teps"] for name, c in rec.get("per_cell",
+                                                      {}).items()
+                     if name.split(":")[0] == app]
+            if cells:
+                vals.append(math.exp(sum(math.log(max(c, 1e-12))
+                                         for c in cells) / len(cells)))
+        if vals:
+            out[app] = max(vals)
+    return out
+
+
 def compare(old: Dict, new: Dict, tol: float = 0.05
             ) -> Tuple[List[str], List[str]]:
     """Returns (failures, notes); empty failures == trajectory ok."""
@@ -76,6 +111,18 @@ def compare(old: Dict, new: Dict, tol: float = 0.05
             failures.append(f"{line}  REGRESSED beyond tol={tol:.0%}")
         else:
             notes.append(line)
+
+    ao, an = app_bests(old), app_bests(new)
+    if ao and an:
+        for app in sorted(set(ao) & set(an)):
+            line = f"best {app} teps: {ao[app]:.6g} -> {an[app]:.6g}"
+            if an[app] < ao[app] * (1.0 - tol):
+                failures.append(f"{line}  REGRESSED beyond tol={tol:.0%}")
+            else:
+                notes.append(line)
+    elif ao or an:
+        notes.append("per-app frontier slices present on one side only "
+                     "(v1/v2 mix) — per-app leg skipped")
 
     common = sorted(set(fo) & set(fn))
     for pid in common:
@@ -107,6 +154,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"[dse.compare] bad input: {e}", file=sys.stderr)
         return 1
+    for name, bench in (("old", old), ("new", new)):
+        schema = bench.get("schema")
+        if schema is not None and schema not in SCHEMAS:
+            print(f"[dse.compare] bad input: {name} schema {schema!r} "
+                  f"not in {SCHEMAS}", file=sys.stderr)
+            return 1
     failures, notes = compare(old, new, tol=args.tol)
     for line in notes:
         print(f"[dse.compare] {line}")

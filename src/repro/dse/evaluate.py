@@ -29,7 +29,12 @@ from ..costmodel import (dcra_die_area_mm2, package_cost, run_energy,
 from ..sparse import apps, datasets
 from .space import DesignPoint
 
-APPS = ("sssp", "pagerank", "bfs", "wcc", "spmv", "histogram")
+APPS = ("sssp", "pagerank", "bfs", "wcc", "spmv", "histogram", "kcore")
+
+# the k the analytic sweep peels at (deterministic; chosen so both quick
+# datasets peel a real fraction of their vertices — a k no dataset peels
+# at would make the kcore cell zero-traffic and its TEPS meaningless)
+KCORE_K = 16
 
 
 def load_datasets(scale: int = 12) -> Dict[str, object]:
@@ -58,6 +63,10 @@ def run_app(app: str, engine: TaskEngine, g, rng_seed: int = 0):
             return apps.histogram(engine, els, max(g.n // 16, 64))
         els = np.asarray(g)        # a raw element stream IS the dataset
         return apps.histogram(engine, els, max(int(els.max()) + 1, 64))
+    if app == "kcore":
+        if not hasattr(g, "nnz"):
+            raise ValueError("kcore needs a graph dataset")
+        return apps.kcore(engine, g, k=KCORE_K)
     raise ValueError(app)
 
 

@@ -1,19 +1,25 @@
 """Subprocess worker: re-validate analytic winners on the real shard_map
-executables.
+executables — for EVERY app, iterative ones included.
 
 The DSE sweep's analytic stack models the bounded input queue of the
 distributed routing layer (:mod:`repro.core.routing`); this worker proves
 the model on a top-K point by routing the *same* task stream through both
 paths at the same parallelism and comparing message / drop counts:
 
-* executable: ``dcra_spmv`` / ``dcra_histogram`` from
-  :mod:`repro.sparse.jax_apps` under ``shard_map`` on ``n_dev`` host
-  devices, with the point's IQ capacity pinned via ``cap=`` (a
-  ``QueueConfig.from_cap`` override under the hood);
-* analytic: ``TaskEngine.route`` with ``QueueConfig(default_iq=cap)`` on a
+* executable: the ``dcra_*`` apps from :mod:`repro.sparse.jax_apps` under
+  ``shard_map`` on ``n_dev`` host devices, with the point's IQ capacity
+  pinned via ``cap=`` (a ``QueueConfig.from_cap`` override under the
+  hood);
+* analytic: each app's **TaskProgram twin**
+  (:func:`repro.sparse.program.program_app_stats`) — the program's
+  generated task stream replayed round by round through
+  ``TaskEngine.route`` with ``QueueConfig(default_iq=cap)`` on a
   ``TileGrid(1, n_dev)`` — one tile per shard, so the per-(source shard →
   owner) channel structure is identical (the property
-  ``tests/test_routing.py`` pins).
+  ``tests/test_routing.py`` pins). For the iterative apps the twin
+  evolves vertex state under the executable's own kept/dropped admission
+  order, so the per-round streams (and therefore drop counts) agree
+  exactly even when tight queues lose updates mid-run.
 
 The ``histogram_self`` app is the heavy self-traffic case: every shard's
 element stream targets mostly bins the shard itself owns, so overflow lands
@@ -28,7 +34,8 @@ Spec::
 
     {"n_dev": 8, "scale": 8, "seed": 0,
      "checks": [{"point_id": "...", "iq_capacity": 12,
-                 "apps": ["spmv", "histogram"]}]}
+                 "apps": ["spmv", "histogram", "bfs", "sssp", "wcc",
+                          "pagerank", "kcore"]}]}
 """
 from __future__ import annotations
 
@@ -43,6 +50,15 @@ import sys      # noqa: E402
 import numpy as np  # noqa: E402
 
 RESULT_PREFIX = "RESULT "
+
+# the iterative (graph-program) apps and their revalidation parameters
+PROGRAM_PARAMS = {
+    "bfs": {"root": 0},
+    "sssp": {"root": 0},
+    "wcc": {},
+    "pagerank": {"damping": 0.85, "iters": 5},
+    "kcore": {"k": 8.0},
+}
 
 
 def _analytic_counts(dest: np.ndarray, n: int, n_dev: int, cap: int):
@@ -112,6 +128,31 @@ def check_point(check: dict, n_dev: int, scale: int, seed: int) -> list:
             dest, _ = histogram_task_stream(els, n_dev)
             y, dropped = dcra_histogram(els, n_items, mesh, cap=cap)
             kept = int(round(float(np.asarray(y).sum())))
+        elif app in PROGRAM_PARAMS:
+            # iterative app: run the whole program, compare the per-round
+            # message/drop trajectories against the TaskProgram twin
+            from ..sparse.jax_apps import PROGRAMS
+            from ..sparse.program import program_app_stats, run_program
+            params = PROGRAM_PARAMS[app]
+            _, stats = run_program(PROGRAMS[app], g, mesh, cap=cap,
+                                   params=params, seed=seed)
+            twin = program_app_stats(PROGRAMS[app], g, n_dev, cap=cap,
+                                     params=params, seed=seed)
+            ok = (stats.rounds == twin.rounds
+                  and np.array_equal(stats.messages, twin.messages)
+                  and np.array_equal(stats.drops, twin.drops))
+            out.append({
+                "point_id": check.get("point_id", ""),
+                "app": app, "n_dev": n_dev, "cap": cap,
+                "executable": {"messages": stats.total_messages,
+                               "drops": stats.total_drops,
+                               "rounds": stats.rounds},
+                "analytic": {"messages": twin.total_messages,
+                             "drops": twin.total_drops,
+                             "rounds": twin.rounds},
+                "ok": ok,
+            })
+            continue
         else:
             raise ValueError(f"unsupported revalidation app {app!r}")
         exe_drops = int(dropped)

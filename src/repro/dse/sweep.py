@@ -28,24 +28,28 @@ from typing import Dict, List, Optional, Sequence
 
 from .autoconfig import signature_of
 from .driver import SweepTask, run_sweep
-from .evaluate import APPS, Evaluator, load_datasets
+from .evaluate import APPS, Evaluator, geomean, load_datasets
 from .pareto import DEFAULT_OBJECTIVES, pareto_frontier
 from .shardcheck import RESULT_PREFIX
 from .space import ConfigSpace
 
-SCHEMA = "dcra-dse-bench/v1"
-QUICK_APPS = ("bfs", "pagerank", "spmv", "histogram")
+SCHEMA = "dcra-dse-bench/v2"
+QUICK_APPS = ("bfs", "pagerank", "spmv", "histogram", "kcore")
+# every app is revalidated on shard_map — the one-round scatters AND the
+# iterative TaskPrograms (per-round trajectory agreement, see shardcheck)
+REVALIDATION_APPS = ("spmv", "histogram", "bfs", "sssp", "wcc",
+                     "pagerank", "kcore")
 
 
 def revalidate(results: Sequence[Dict], top_k: int, n_dev: int,
-               scale: int, timeout: float = 900.0) -> List[Dict]:
+               scale: int, timeout: float = 1800.0) -> List[Dict]:
     """Re-run the top-K points' queue model on the shard_map executables
     (subprocess: the fake-device count must be set before jax imports)."""
     ranked = sorted((r for r in results if r.get("pareto")),
                     key=lambda r: -r["metrics"]["teps_geomean"])
     checks = [{"point_id": r["point_id"],
                "iq_capacity": r["config"]["iq_capacity"],
-               "apps": ["spmv", "histogram"]}
+               "apps": list(REVALIDATION_APPS)}
               for r in ranked[:top_k]]
     if not checks:
         return []
@@ -61,6 +65,32 @@ def revalidate(results: Sequence[Dict], top_k: int, n_dev: int,
             f"shardcheck failed (rc={proc.returncode}):\n"
             f"{proc.stderr[-2000:]}")
     return json.loads(lines[-1][len(RESULT_PREFIX):])
+
+
+def per_app_frontiers(valid: Sequence[Dict], apps_list: Sequence[str]
+                      ) -> Dict[str, List[str]]:
+    """App-specific Pareto slices: the (TEPS↑, watts↓, $/pkg↓) frontier
+    recomputed from each record's per-``app`` cells alone. A point that is
+    globally dominated can still be optimal *for one app* (and vice
+    versa) — ``autoconfig.select_from_frontier`` ranks on these."""
+    out: Dict[str, List[str]] = {}
+    for app in apps_list:
+        recs, pids = [], []
+        for r in valid:
+            cells = [c for name, c in r.get("per_cell", {}).items()
+                     if name.split(":")[0] == app]
+            if not cells:
+                continue
+            recs.append({
+                "teps": geomean([c["teps"] for c in cells]),
+                "watts": geomean([c["energy_j"] / max(c["seconds"], 1e-12)
+                                  for c in cells]),
+                "package_usd": r["metrics"]["package_usd"],
+            })
+            pids.append(r["point_id"])
+        idx = pareto_frontier(recs, DEFAULT_OBJECTIVES)
+        out[app] = sorted(pids[i] for i in idx)
+    return out
 
 
 def run(space: ConfigSpace, apps_list: Sequence[str], scale: int,
@@ -88,6 +118,7 @@ def run(space: ConfigSpace, apps_list: Sequence[str], scale: int,
     frontier_ids = {valid[i]["point_id"] for i in frontier}
     for r in valid:
         r["pareto"] = r["point_id"] in frontier_ids
+    app_frontiers = per_app_frontiers(valid, apps_list)
 
     reval: List[Dict] = []
     if not skip_revalidation:
@@ -107,6 +138,9 @@ def run(space: ConfigSpace, apps_list: Sequence[str], scale: int,
                                for name, g in data.items()},
         "points": records,
         "pareto": sorted(frontier_ids),
+        # schema v2: app-specific Pareto slices so launch auto-config can
+        # rank on the frontier of the app actually being launched
+        "app_frontiers": app_frontiers,
         "revalidation": reval,
         "elapsed_s": time.time() - t0,
     }

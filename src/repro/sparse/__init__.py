@@ -2,9 +2,10 @@ from . import apps, csr, datasets, ref                    # noqa: F401
 
 # The distributed executables import jax; keep the numpy-only analytic path
 # (datasets/oracles/task-engine apps) jax-free by resolving them lazily.
-_JAX_APPS = ("AppStats", "dcra_bfs", "dcra_histogram", "dcra_pagerank",
+_JAX_APPS = ("AppStats", "PROGRAMS", "TaskProgram", "dcra_bfs",
+             "dcra_histogram", "dcra_kcore", "dcra_pagerank",
              "dcra_scatter", "dcra_spmv", "dcra_sssp", "dcra_wcc",
-             "histogram_task_stream", "spmv_task_stream")
+             "histogram_task_stream", "run_program", "spmv_task_stream")
 
 
 def __getattr__(name):

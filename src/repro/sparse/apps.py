@@ -1,4 +1,4 @@
-"""The six paper applications on the DCRA task engine (§IV-A).
+"""The paper applications (§IV-A, plus k-core) on the DCRA task engine.
 
 Task structure follows Dalorex/DCRA: pointer indirections split tasks —
   T1 (vertex task, at owner(v))      — spawns an edge-list lookup   [OQ1]
@@ -127,6 +127,26 @@ def spmv(engine: TaskEngine, g: CSR, x: np.ndarray
     active = cols[gt.degrees() > 0]
     _expand(engine, gt, active, x[active], y, "mul_add")
     return y, engine.stats
+
+
+def kcore(engine: TaskEngine, g: CSR, k: int = 8
+          ) -> Tuple[np.ndarray, RunStats]:
+    """k-core decomposition: peel sub-``k`` vertices round by round, each
+    removal routing unit degree-decrement tasks along both edge
+    directions (the undirected view, like :func:`wcc`). Returns within-core
+    degrees (-1 for peeled vertices) — matches ``ref.kcore_ref``."""
+    gt = g.transpose()
+    deg = (g.degrees() + gt.degrees()).astype(np.float64)
+    alive = np.ones(g.n, bool)
+    frontier = np.flatnonzero(alive & (deg < k))
+    while len(frontier):
+        dec = np.zeros(g.n)
+        _expand(engine, g, frontier, np.ones(len(frontier)), dec, "add")
+        _expand(engine, gt, frontier, np.ones(len(frontier)), dec, "add")
+        alive[frontier] = False
+        deg = deg - dec
+        frontier = np.flatnonzero(alive & (deg < k))
+    return np.where(alive, deg, -1).astype(np.int64), engine.stats
 
 
 def histogram(engine: TaskEngine, elements: np.ndarray, n_bins: int

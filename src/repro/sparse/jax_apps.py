@@ -1,40 +1,35 @@
 """Executable JAX implementations of the paper apps — single-device jnp and
 *distributed* owner-routed rounds under shard_map.
 
-ALL SIX paper applications (§IV-A) now run on the distributed path: SpMV
-and Histogram as one owner-routed scatter round, and BFS / SSSP / PageRank /
-WCC as iterative executables (``lax.while_loop`` / ``fori_loop``) where every
-round re-enters the shared NoC collective layer in
-:mod:`repro.core.routing` — the same capacity-bounded bucketing + fused
-all_to_all machinery the MoE dispatch uses, at graph granularity.
+ALL SEVEN applications (the paper's six, §IV-A, plus k-core
+decomposition) are now **TaskProgram definitions**: each app is a ~30-line
+declarative spec — edge-payload rule, reduce op, frontier-update rule,
+task class — and the shared :func:`repro.sparse.program.run_program`
+runtime owns launch/queue resolution, the flat vs pod/portal path, the
+cyclic owner layout, the one-round vs ``lax.while_loop`` execution shape,
+per-round :class:`~repro.sparse.program.AppStats` and the compile cache.
+Program rules are xp-generic, so the SAME definitions drive the analytic
+twin (:func:`repro.sparse.program.program_app_stats`) the DSE
+revalidation replays through ``TaskEngine.route``.
 
 Layouts mirror DCRA's cyclic PGAS: vertex ``v`` lives on device
 ``v % n_dev`` at local slot ``v // n_dev``; edges are partitioned by the
 owner of their *source* vertex so reading the frontier value is tile-local
 and only the per-edge update crosses the NoC (tasks ``(dest, value)`` with
 bounded input queues; overflow dropped and counted).
-
-Each app returns per-round message/drop counts as :class:`AppStats`,
-convertible to the cost model's ``RunStats`` — the executable path and the
-analytic :mod:`repro.core.task_engine` twin expose the same instrumentation
-shape.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from jax.sharding import PartitionSpec as P
-
-from ..core.compat import shard_map_unchecked
-from ..core.queues import QueueConfig
-from ..core.routing import owner_route, owner_route_hier, reduce_received
-from ..core.task_engine import RoundStats, RunStats
 from .csr import CSR
+# dcra_scatter / from_owner_layout are re-exported: tests and benchmarks
+# address the one-round scatter and the layout inverse through this module
+from .program import (AppStats, TaskProgram, dcra_scatter,  # noqa: F401
+                      from_owner_layout, run_program)
 
 
 # ---------------------------------------------------------------------------
@@ -46,12 +41,13 @@ def spmv_jnp(rows, cols, vals, x, n):
 
 
 def histogram_jnp(elements, n_bins):
-    return jax.ops.segment_sum(jnp.ones_like(elements), elements,
+    return jax.ops.segment_sum(jax.numpy.ones_like(elements), elements,
                                num_segments=n_bins)
 
 
 def bfs_jnp(rows, cols, n, root, max_levels: Optional[int] = None):
     """Edge-parallel BFS: one scatter-min round per level."""
+    jnp = jax.numpy
     dist = jnp.full((n,), jnp.inf).at[root].set(0.0)
 
     def round_(level, dist):
@@ -66,184 +62,8 @@ def bfs_jnp(rows, cols, n, root, max_levels: Optional[int] = None):
 
 
 # ---------------------------------------------------------------------------
-# per-round instrumentation (the executable twin of RunStats)
+# task streams for the one-round scatter programs
 # ---------------------------------------------------------------------------
-
-@dataclass
-class AppStats:
-    """Per-round NoC counters from a distributed run.
-
-    ``messages`` counts routed tasks per round (including owner-local ones —
-    they occupy IQ slots just the same); ``drops`` counts IQ-overflow
-    discards. Convert with :meth:`to_run_stats` for the cost model.
-    """
-    rounds: int
-    messages: np.ndarray          # [rounds] int64
-    drops: np.ndarray             # [rounds] int64
-
-    @property
-    def total_messages(self) -> int:
-        return int(self.messages.sum())
-
-    @property
-    def total_drops(self) -> int:
-        return int(self.drops.sum())
-
-    def to_run_stats(self, payload_words: int = 2,
-                     word_bytes: int = 8) -> RunStats:
-        rs = RunStats()
-        for m, d in zip(self.messages.tolist(), self.drops.tolist()):
-            rs.rounds.append(RoundStats(
-                messages=int(m),
-                payload_bytes=int(m) * payload_words * word_bytes,
-                tasks_total=int(m),
-                drops=int(d)))
-        return rs
-
-
-def _collect_stats(rounds, msgs, drops) -> AppStats:
-    r = int(rounds)
-    return AppStats(rounds=r,
-                    messages=np.asarray(msgs)[:r].astype(np.int64),
-                    drops=np.asarray(drops)[:r].astype(np.int64))
-
-
-# ---------------------------------------------------------------------------
-# the DCRA owner-routed round (distributed)
-# ---------------------------------------------------------------------------
-
-def _axis_sizes(mesh):
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
-
-
-def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
-                 capacity_factor: float = 1.5, pod_axis=None,
-                 cap: Optional[int] = None,
-                 queues: Optional[QueueConfig] = None, task: str = "T3"):
-    """Owner-routed scatter-reduce: one NoC round.
-
-    dest/vals: [E] sharded over the device axes (edge-parallel tasks);
-    returns y [n] sharded the same way (cyclic owner layout: item i lives
-    on device i % n_dev at local slot i // n_dev) plus the dropped-task
-    count (queue overflow).
-
-    ``pod_axis`` selects the hierarchical pod/portal two-stage path
-    (paper §III-A): stage 1 aggregates at the per-pod portal over ``axis``
-    (tile-NoC), stage 2 crosses pods exactly once (die-NoC).
-
-    Queue sizing resolves through ONE path — :class:`QueueConfig` — like
-    everywhere else in the repo. ``queues`` names the per-``task`` IQ
-    directly; the legacy ``cap=`` / ``capacity_factor=`` kwargs are sugar
-    for ``QueueConfig.from_cap`` / ``QueueConfig.from_factor`` overrides.
-    Explicit capacities are honored exactly (flat path only — the DSE
-    revalidation sweeps the IQ axis in queue entries, so rounding would
-    validate a different capacity than the analytic model swept);
-    factor-derived capacities keep the lane-aligned round8.
-    """
-    n_dev = mesh.devices.size
-    e_local = dest.shape[0] // n_dev
-    n_local = -(-n // n_dev)
-    spec = P((pod_axis, axis)) if pod_axis else P(axis)
-    if queues is None:
-        queues = (QueueConfig.from_cap(cap, task) if cap is not None
-                  else QueueConfig.from_factor(capacity_factor, task))
-    explicit = queues.iq_sizes.get(task, None)
-    if explicit is not None and pod_axis is not None:
-        raise ValueError("explicit cap is only defined for the flat path")
-
-    if pod_axis is None:
-        cap = queues.channel_cap(task, e_local, n_dev)
-        if cap is None:          # unbounded -> every local task can fit
-            cap = max(1, e_local)
-        cap = max(1, int(cap))
-
-        def kernel(dest_b, vals_b):
-            valid = dest_b >= 0                    # padding -> no task
-            dest_c = jnp.maximum(dest_b, 0)
-            recv_slot, recv_val, n_drop = owner_route(
-                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
-                n_dev, cap, axis)
-            y = reduce_received(recv_slot, recv_val, n_local, op)
-            return y, jax.lax.psum(n_drop, axis)
-    else:
-        sizes = _axis_sizes(mesh)
-        n_intra, n_pods = sizes[axis], sizes[pod_axis]
-        cap1 = queues.channel_cap(task, e_local, n_intra)
-        cap1 = max(1, e_local) if cap1 is None else cap1
-        cap2 = queues.channel_cap(task, n_intra * cap1, n_pods)
-        cap2 = max(1, n_intra * cap1) if cap2 is None else cap2
-
-        def kernel(dest_b, vals_b):
-            valid = dest_b >= 0
-            dest_c = jnp.maximum(dest_b, 0)
-            recv_slot, recv_val, n_drop = owner_route_hier(
-                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
-                n_intra, axis, n_pods, pod_axis, cap1, cap2)
-            y = reduce_received(recv_slot, recv_val, n_local, op)
-            return y, jax.lax.psum(n_drop, (pod_axis, axis))
-
-    return shard_map_unchecked(kernel, mesh=mesh, in_specs=(spec, spec),
-                               out_specs=(spec, P()))(dest, vals)
-
-
-def _resolve_launch(config, g, app, objective="teps", kwargs_set=()):
-    """Resolve an app's ``config=`` kwarg to a ``LaunchConfig`` (or None).
-
-    ``"auto"`` runs the Pareto-guided selection in
-    :mod:`repro.dse.autoconfig`; a ``LaunchConfig`` passes through; a
-    ``DesignPoint`` is wrapped as an explicit choice. ``None`` keeps the
-    legacy kwarg-driven sizing. ``kwargs_set`` names explicitly-passed
-    sizing kwargs — combining those with ``config=`` is an error, not a
-    silent override.
-    """
-    if config is None:
-        return None
-    if kwargs_set:
-        raise ValueError(f"config= conflicts with explicit {kwargs_set}: "
-                         f"queue sizing comes from the resolved "
-                         f"LaunchConfig, drop one of them")
-    from ..dse.autoconfig import LaunchConfig, autoconfigure, launch_for
-    if isinstance(config, str):
-        if config != "auto":
-            raise ValueError(f"unknown config {config!r} (expected 'auto', "
-                             f"a LaunchConfig or a DesignPoint)")
-        return autoconfigure(g, app, objective=objective)
-    if isinstance(config, LaunchConfig):
-        return config
-    return launch_for(config, g, objective=objective)
-
-
-def owner_layout(arr_n, n_dev):
-    """Reorder a dense [n] array into cyclic-owner order (device-major)."""
-    n = arr_n.shape[0]
-    n_local = -(-n // n_dev)
-    idx = jnp.arange(n_local * n_dev)
-    src = (idx % n_local) * n_dev + idx // n_local   # device-major -> global
-    src = jnp.minimum(src, n - 1)
-    valid = ((idx % n_local) * n_dev + idx // n_local) < n
-    return jnp.where(valid, arr_n[src], 0), valid
-
-
-def from_owner_layout(y_sharded, n, n_dev):
-    """Inverse of owner_layout: [n_local*n_dev] -> global order [n]."""
-    n_local = -(-n // n_dev)
-    g = jnp.arange(n)
-    pos = (g % n_dev) * n_local + g // n_dev
-    return y_sharded[pos]
-
-
-def _owner_pack_np(arr, n_dev, fill):
-    """numpy owner_layout with a chosen fill for the padding slots."""
-    arr = np.asarray(arr, np.float64)
-    n = len(arr)
-    n_local = -(-n // n_dev)
-    idx = np.arange(n_local * n_dev)
-    g = (idx % n_local) * n_dev + idx // n_local
-    valid = g < n
-    out = np.full(n_local * n_dev, fill, np.float64)
-    out[valid] = arr[g[valid]]
-    return out, valid
-
 
 def spmv_task_stream(g: CSR, x: np.ndarray, n_dev: int, seed: int = 0
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -284,6 +104,143 @@ def histogram_task_stream(elements: np.ndarray, n_dev: int
     return dest, vals
 
 
+def _spmv_stream(data, params, n_dev, seed):
+    g, x = data
+    dest, vals = spmv_task_stream(g, x, n_dev, seed)
+    return dest, vals, g.n
+
+
+def _histogram_stream(data, params, n_dev, seed):
+    elements, n_bins = data
+    dest, vals = histogram_task_stream(elements, n_dev)
+    return dest, vals, n_bins
+
+
+# ---------------------------------------------------------------------------
+# program rule library (xp-generic: jnp in-kernel, numpy in the twin)
+# ---------------------------------------------------------------------------
+
+def _dist_init(g, params):
+    dist = np.full(g.n, np.inf)
+    dist[int(params["root"])] = 0.0
+    return (dist,), (np.inf,)
+
+
+def _label_init(g, params):
+    return (np.arange(g.n, dtype=np.float64),), (np.inf,)
+
+
+def _finite_frontier(ctx, state):
+    return ctx.xp.isfinite(state[0])
+
+
+def _all_frontier(ctx, state):
+    return ctx.xp.ones(state[0].shape, bool)
+
+
+def _hops_payload(ctx, state, src_slot, w):
+    return state[0][src_slot] + 1.0
+
+
+def _weight_payload(ctx, state, src_slot, w):
+    return state[0][src_slot] + w
+
+
+def _label_payload(ctx, state, src_slot, w):
+    return state[0][src_slot]
+
+
+def _min_update(ctx, state, frontier, upd):
+    new = ctx.xp.minimum(state[0], upd)
+    return (new,), new < state[0]
+
+
+BFS = TaskProgram(name="bfs", reduce_op="min", payload=_hops_payload,
+                  init=_dist_init, frontier0=_finite_frontier,
+                  update=_min_update)
+
+SSSP = TaskProgram(name="sssp", reduce_op="min", payload=_weight_payload,
+                   init=_dist_init, frontier0=_finite_frontier,
+                   update=_min_update, max_rounds=256)
+
+WCC = TaskProgram(name="wcc", reduce_op="min", payload=_label_payload,
+                  init=_label_init, frontier0=_all_frontier,
+                  update=_min_update, undirected=True)
+
+
+def _pr_init(g, params):
+    deg = g.degrees().astype(np.float64)
+    rank = np.full(g.n, 1.0 / g.n)
+    return (rank, deg, np.ones(g.n)), (0.0, 0.0, 0.0)
+
+
+def _pr_payload(ctx, state, src_slot, w):
+    rank, deg, vmask = state
+    contrib = ctx.xp.where(deg > 0, rank / ctx.xp.maximum(deg, 1.0), 0.0)
+    return contrib[src_slot]
+
+
+def _pr_update(ctx, state, frontier, upd):
+    rank, deg, vmask = state
+    xp = ctx.xp
+    damping = ctx.params["damping"]
+    inv_n = xp.float32(1.0 / ctx.n)
+    dangling = ctx.gsum(xp.sum(
+        xp.where((vmask > 0) & (deg == 0), rank, 0.0)))
+    rank2 = xp.where(vmask > 0, (1.0 - damping) * inv_n
+                     + damping * (upd + dangling * inv_n), 0.0)
+    return (rank2, deg, vmask), frontier
+
+
+PAGERANK = TaskProgram(name="pagerank", reduce_op="add", mode="fixed",
+                       active="all", payload=_pr_payload, init=_pr_init,
+                       frontier0=_all_frontier, update=_pr_update)
+
+SPMV = TaskProgram(name="spmv", reduce_op="add", mode="single",
+                   default_capacity_factor=2.0, stream=_spmv_stream)
+
+HISTOGRAM = TaskProgram(name="histogram", reduce_op="add", mode="single",
+                        default_capacity_factor=2.0,
+                        stream=_histogram_stream)
+
+
+# ---- k-core decomposition: the seventh app, a pure program definition ----
+
+def _kcore_init(g, params):
+    # undirected view: degree counts each stored direction (in + out)
+    deg = (g.degrees() + g.transpose().degrees()).astype(np.float64)
+    return (deg, np.ones(g.n)), (0.0, 0.0)
+
+
+def _kcore_frontier0(ctx, state):
+    deg, alive = state
+    return (alive > 0) & (deg < ctx.params["k"])
+
+
+def _unit_payload(ctx, state, src_slot, w):
+    return ctx.xp.ones(src_slot.shape, ctx.xp.float32)
+
+
+def _kcore_update(ctx, state, frontier, upd):
+    deg, alive = state
+    alive2 = ctx.xp.where(frontier, 0.0, alive)   # peeled this round
+    deg2 = deg - upd                              # received decrements
+    return (deg2, alive2), (alive2 > 0) & (deg2 < ctx.params["k"])
+
+
+KCORE = TaskProgram(name="kcore", reduce_op="add", undirected=True,
+                    payload=_unit_payload, init=_kcore_init,
+                    frontier0=_kcore_frontier0, update=_kcore_update)
+
+
+PROGRAMS = {p.name: p for p in (BFS, SSSP, WCC, PAGERANK, SPMV, HISTOGRAM,
+                                KCORE)}
+
+
+# ---------------------------------------------------------------------------
+# public app entry points (thin wrappers over run_program)
+# ---------------------------------------------------------------------------
+
 def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
               capacity_factor: Optional[float] = None, seed: int = 0,
               pod_axis=None, cap: Optional[int] = None, config=None,
@@ -295,166 +252,28 @@ def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
     :mod:`repro.dse.autoconfig`) instead of the kwargs (combining the
     two raises). ``capacity_factor`` defaults to 2.0.
     """
-    lc = _resolve_launch(config, g, "spmv", objective,
-                         kwargs_set=[k for k, v in
-                                     (("capacity_factor", capacity_factor),
-                                      ("cap", cap)) if v is not None])
-    if capacity_factor is None:
-        capacity_factor = 2.0
-    n_dev = mesh.devices.size
-    dest, vals_eff = spmv_task_stream(g, x, n_dev, seed)
-    queues = None
-    if lc is not None:
-        pod_axis = pod_axis if pod_axis is not None else lc.pod_axis_for(mesh)
-        queues = lc.device_queues(n_dev, len(dest) // n_dev,
-                                  pod=pod_axis is not None)
-    y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals_eff),
-                                 g.n, mesh, axis,
-                                 op="add", capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis, cap=cap, queues=queues)
-    return from_owner_layout(y_sh, g.n, n_dev), dropped
+    y, stats = run_program(SPMV, (g, x), mesh, dataset=g, axis=axis,
+                           pod_axis=pod_axis, cap=cap,
+                           capacity_factor=capacity_factor, config=config,
+                           objective=objective, seed=seed)
+    return y, stats.total_drops
 
 
 def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
                    capacity_factor: Optional[float] = None, pod_axis=None,
                    cap: Optional[int] = None, config=None,
                    objective="teps"):
-    lc = _resolve_launch(config, elements, "histogram", objective,
-                         kwargs_set=[k for k, v in
-                                     (("capacity_factor", capacity_factor),
-                                      ("cap", cap)) if v is not None])
-    if capacity_factor is None:
-        capacity_factor = 2.0
-    n_dev = mesh.devices.size
-    dest, ones = histogram_task_stream(elements, n_dev)
-    queues = None
-    if lc is not None:
-        pod_axis = pod_axis if pod_axis is not None else lc.pod_axis_for(mesh)
-        queues = lc.device_queues(n_dev, len(dest) // n_dev,
-                                  pod=pod_axis is not None)
-    y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(ones),
-                                 n_bins, mesh, axis, op="add",
-                                 capacity_factor=capacity_factor,
-                                 pod_axis=pod_axis, cap=cap, queues=queues)
-    return from_owner_layout(y_sh, n_bins, n_dev), dropped
-
-
-# ---------------------------------------------------------------------------
-# iterative graph apps: owner-routed rounds under lax.while_loop/fori_loop
-# ---------------------------------------------------------------------------
-
-def _pack_edges(rows, cols, wts, n_dev, seed=0):
-    """Partition edges by src-vertex owner (device-major flat arrays).
-
-    Returns (src_slot, dst, w, E_max): each [n_dev * E_max]; padding edges
-    carry dst = -1 (owner_route treats them as no-task). Edges are shuffled
-    within each device so owner buckets fill uniformly.
-    """
-    rng = np.random.default_rng(seed)
-    perm = rng.permutation(len(rows))
-    rows, cols, wts = rows[perm], cols[perm], wts[perm]
-    own = (rows % n_dev).astype(np.int64)
-    counts = np.bincount(own, minlength=n_dev)
-    E_max = max(8, int(counts.max()))
-    src_slot = np.zeros((n_dev, E_max), np.int32)
-    dst = np.full((n_dev, E_max), -1, np.int32)
-    w = np.zeros((n_dev, E_max), np.float32)
-    for d in range(n_dev):
-        sel = own == d
-        k = int(counts[d])
-        src_slot[d, :k] = (rows[sel] // n_dev).astype(np.int32)
-        dst[d, :k] = cols[sel].astype(np.int32)
-        w[d, :k] = wts[sel]
-    return (jnp.asarray(src_slot.reshape(-1)), jnp.asarray(dst.reshape(-1)),
-            jnp.asarray(w.reshape(-1)), E_max)
-
-
-def _graph_setup(g: CSR, mesh, undirected=False, seed=0):
-    n_dev = mesh.devices.size
-    rows, cols, wts = g.row_of(), g.col_idx.astype(np.int64), g.values
-    if undirected:
-        rows, cols = np.concatenate([rows, cols]), np.concatenate([cols, rows])
-        wts = np.concatenate([wts, wts])
-    src_slot, dst, w, E_max = _pack_edges(rows, cols, wts, n_dev, seed)
-    n_local = -(-g.n // n_dev)
-    return n_dev, n_local, src_slot, dst, w, E_max
-
-
-def _frontier_min_app(g: CSR, mesh, dist0_np, *, value, axis="data",
-                      capacity_factor: float = 4.0, max_rounds: int = 128,
-                      undirected: bool = False, seed: int = 0,
-                      launch=None):
-    """Shared driver for BFS / SSSP / WCC: frontier-driven scatter-min
-    rounds inside ONE lax.while_loop under shard_map.
-
-    ``value`` chooses the per-edge task payload: 'hops' (dist+1), 'weight'
-    (dist+w), or 'label' (dist itself). ``launch`` (a resolved
-    ``LaunchConfig``) overrides the IQ sizing through ``QueueConfig``.
-    """
-    n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(
-        g, mesh, undirected=undirected, seed=seed)
-    queues = (launch.device_queues(n_dev, E_max) if launch is not None
-              else QueueConfig.from_factor(capacity_factor))
-    cap = queues.channel_cap("T3", E_max, n_dev)
-    cap = max(1, E_max) if cap is None else min(cap, max(1, E_max))
-    dist0, _ = _owner_pack_np(dist0_np.astype(np.float64), n_dev, np.inf)
-    dist0 = jnp.asarray(dist0, jnp.float32)
-
-    def kernel(src_slot_b, dst_b, w_b, dist_b):
-        owner = jnp.maximum(dst_b, 0) % n_dev
-        slot = jnp.maximum(dst_b, 0) // n_dev
-        evalid = dst_b >= 0
-
-        def cond(state):
-            _, _, r, _, _, changed = state
-            return changed & (r < max_rounds)
-
-        def body(state):
-            dist, frontier, r, msgs, drops, _ = state
-            active = frontier[src_slot_b] & evalid
-            base = dist[src_slot_b]
-            if value == "hops":
-                vals = base + 1.0
-            elif value == "weight":
-                vals = base + w_b
-            else:                                   # 'label'
-                vals = base
-            m = jax.lax.psum(jnp.sum(active.astype(jnp.int32)), axis)
-            recv_slot, recv_val, nd = owner_route(
-                vals, slot, owner, active, n_dev, cap, axis)
-            upd = reduce_received(recv_slot, recv_val, n_local, "min")
-            new_dist = jnp.minimum(dist, upd)
-            frontier2 = new_dist < dist
-            changed = jax.lax.psum(
-                jnp.sum(frontier2.astype(jnp.int32)), axis) > 0
-            msgs = msgs.at[r].set(m)
-            drops = drops.at[r].set(
-                jax.lax.psum(nd.astype(jnp.int32), axis))
-            return (new_dist, frontier2, r + 1, msgs, drops, changed)
-
-        zeros = jnp.zeros((max_rounds,), jnp.int32)
-        state = (dist_b, jnp.isfinite(dist_b) if value != "label"
-                 else jnp.ones_like(dist_b, bool),
-                 jnp.int32(0), zeros, zeros, jnp.bool_(True))
-        dist, _, r, msgs, drops, _ = jax.lax.while_loop(cond, body, state)
-        return dist, r, msgs, drops
-
-    spec = P(axis)
-    dist, r, msgs, drops = shard_map_unchecked(
-        kernel, mesh=mesh,
-        in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, P(), P(), P()))(src_slot, dst, w, dist0)
-    dist_np = np.asarray(from_owner_layout(dist, g.n, n_dev))
-    return dist_np, _collect_stats(r, msgs, drops)
-
-
-def _cf_kwargs_set(capacity_factor):
-    return ["capacity_factor"] if capacity_factor is not None else []
+    y, stats = run_program(HISTOGRAM, (elements, n_bins), mesh,
+                           dataset=elements, axis=axis, pod_axis=pod_axis,
+                           cap=cap, capacity_factor=capacity_factor,
+                           config=config, objective=objective)
+    return y, stats.total_drops
 
 
 def dcra_bfs(g: CSR, root: int, mesh, axis="data",
              capacity_factor: Optional[float] = None, max_rounds: int = 128,
-             seed: int = 0, config=None, objective="teps"
+             seed: int = 0, config=None, objective="teps",
+             cap: Optional[int] = None, pod_axis=None
              ) -> Tuple[np.ndarray, AppStats]:
     """Distributed BFS: hop count from root, -1 if unreachable.
 
@@ -463,109 +282,70 @@ def dcra_bfs(g: CSR, root: int, mesh, axis="data",
     ``capacity_factor`` (default 4.0) is the manual alternative —
     passing both raises.
     """
-    lc = _resolve_launch(config, g, "bfs", objective,
-                         kwargs_set=_cf_kwargs_set(capacity_factor))
-    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
-    dist0 = np.full(g.n, np.inf)
-    dist0[root] = 0.0
-    d, stats = _frontier_min_app(g, mesh, dist0, value="hops", axis=axis,
-                                 capacity_factor=capacity_factor,
-                                 max_rounds=max_rounds, seed=seed,
-                                 launch=lc)
+    (d,), stats = run_program(BFS, g, mesh, axis=axis, pod_axis=pod_axis,
+                              cap=cap, capacity_factor=capacity_factor,
+                              config=config, objective=objective,
+                              params={"root": int(root)},
+                              max_rounds=max_rounds, seed=seed)
     return np.where(np.isfinite(d), d, -1).astype(np.int64), stats
 
 
 def dcra_sssp(g: CSR, root: int, mesh, axis="data",
               capacity_factor: Optional[float] = None, max_rounds: int = 256,
-              seed: int = 0, config=None, objective="teps"
+              seed: int = 0, config=None, objective="teps",
+              cap: Optional[int] = None, pod_axis=None
               ) -> Tuple[np.ndarray, AppStats]:
     """Distributed SSSP (frontier Bellman-Ford): inf if unreachable."""
-    lc = _resolve_launch(config, g, "sssp", objective,
-                         kwargs_set=_cf_kwargs_set(capacity_factor))
-    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
-    dist0 = np.full(g.n, np.inf)
-    dist0[root] = 0.0
-    d, stats = _frontier_min_app(g, mesh, dist0, value="weight", axis=axis,
-                                 capacity_factor=capacity_factor,
-                                 max_rounds=max_rounds, seed=seed,
-                                 launch=lc)
+    (d,), stats = run_program(SSSP, g, mesh, axis=axis, pod_axis=pod_axis,
+                              cap=cap, capacity_factor=capacity_factor,
+                              config=config, objective=objective,
+                              params={"root": int(root)},
+                              max_rounds=max_rounds, seed=seed)
     return d.astype(np.float64), stats
 
 
 def dcra_wcc(g: CSR, mesh, axis="data",
              capacity_factor: Optional[float] = None,
              max_rounds: int = 128, seed: int = 0, config=None,
-             objective="teps") -> Tuple[np.ndarray, AppStats]:
+             objective="teps", cap: Optional[int] = None, pod_axis=None
+             ) -> Tuple[np.ndarray, AppStats]:
     """Distributed WCC via min-label propagation over both edge directions."""
     if g.n > (1 << 24):
         # labels ride the f32 NoC payload; ids above 2^24 would collide
         raise ValueError(f"dcra_wcc supports up to 2^24 vertices, got {g.n}")
-    lc = _resolve_launch(config, g, "wcc", objective,
-                         kwargs_set=_cf_kwargs_set(capacity_factor))
-    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
-    label0 = np.arange(g.n, dtype=np.float64)
-    lab, stats = _frontier_min_app(g, mesh, label0, value="label", axis=axis,
-                                   capacity_factor=capacity_factor,
-                                   max_rounds=max_rounds, undirected=True,
-                                   seed=seed, launch=lc)
+    (lab,), stats = run_program(WCC, g, mesh, axis=axis, pod_axis=pod_axis,
+                                cap=cap, capacity_factor=capacity_factor,
+                                config=config, objective=objective,
+                                max_rounds=max_rounds, seed=seed)
     return lab.astype(np.int64), stats
 
 
 def dcra_pagerank(g: CSR, mesh, damping: float = 0.85, iters: int = 20,
                   axis="data", capacity_factor: Optional[float] = None,
-                  seed: int = 0, config=None, objective="teps"
+                  seed: int = 0, config=None, objective="teps",
+                  cap: Optional[int] = None, pod_axis=None
                   ) -> Tuple[np.ndarray, AppStats]:
     """Distributed PageRank: ``iters`` owner-routed epochs (fori_loop),
     dangling mass redistributed uniformly each epoch (matches the oracle)."""
-    lc = _resolve_launch(config, g, "pagerank", objective,
-                         kwargs_set=_cf_kwargs_set(capacity_factor))
-    capacity_factor = 4.0 if capacity_factor is None else capacity_factor
-    n_dev, n_local, src_slot, dst, w, E_max = _graph_setup(g, mesh, seed=seed)
-    queues = (lc.device_queues(n_dev, E_max) if lc is not None
-              else QueueConfig.from_factor(capacity_factor))
-    cap = queues.channel_cap("T3", E_max, n_dev)
-    cap = max(1, E_max) if cap is None else min(cap, max(1, E_max))
-    n = g.n
-    deg, vvalid = _owner_pack_np(g.degrees().astype(np.float64), n_dev, 0.0)
-    deg = jnp.asarray(deg, jnp.float32)
-    vvalid = jnp.asarray(vvalid)
-    rank0 = jnp.where(vvalid, jnp.float32(1.0 / n), 0.0)
+    (rank, _, _), stats = run_program(
+        PAGERANK, g, mesh, axis=axis, pod_axis=pod_axis, cap=cap,
+        capacity_factor=capacity_factor, config=config, objective=objective,
+        params={"damping": float(damping), "iters": int(iters)}, seed=seed)
+    return rank, stats
 
-    def kernel(src_slot_b, dst_b, deg_b, vvalid_b, rank_b):
-        owner = jnp.maximum(dst_b, 0) % n_dev
-        slot = jnp.maximum(dst_b, 0) // n_dev
-        evalid = dst_b >= 0
-        inv_n = jnp.float32(1.0 / n)
 
-        def body(i, state):
-            rank, msgs, drops = state
-            contrib = jnp.where(deg_b > 0, rank / jnp.maximum(deg_b, 1.0),
-                                0.0)
-            vals = contrib[src_slot_b]
-            m = jax.lax.psum(jnp.sum(evalid.astype(jnp.int32)), axis)
-            recv_slot, recv_val, nd = owner_route(
-                vals, slot, owner, evalid, n_dev, cap, axis)
-            acc = reduce_received(recv_slot, recv_val, n_local, "add")
-            dangling = jax.lax.psum(
-                jnp.sum(jnp.where(vvalid_b & (deg_b == 0), rank, 0.0)), axis)
-            rank2 = jnp.where(
-                vvalid_b,
-                (1.0 - damping) * inv_n + damping * (acc + dangling * inv_n),
-                0.0)
-            return (rank2, msgs.at[i].set(m),
-                    drops.at[i].set(jax.lax.psum(nd.astype(jnp.int32),
-                                                 axis)))
-
-        zeros = jnp.zeros((iters,), jnp.int32)
-        rank, msgs, drops = jax.lax.fori_loop(0, iters, body,
-                                              (rank_b, zeros, zeros))
-        return rank, msgs, drops
-
-    spec = P(axis)
-    rank, msgs, drops = shard_map_unchecked(
-        kernel, mesh=mesh,
-        in_specs=(spec, spec, spec, spec, spec),
-        out_specs=(spec, P(), P()))(src_slot, dst, deg, vvalid, rank0)
-    rank_np = np.asarray(from_owner_layout(rank, g.n, n_dev),
-                         dtype=np.float64)
-    return rank_np, _collect_stats(iters, msgs, drops)
+def dcra_kcore(g: CSR, k: int, mesh, axis="data",
+               capacity_factor: Optional[float] = None,
+               max_rounds: int = 128, seed: int = 0, config=None,
+               objective="teps", cap: Optional[int] = None, pod_axis=None
+               ) -> Tuple[np.ndarray, AppStats]:
+    """Distributed k-core decomposition: iterative peel via owner-routed
+    degree decrements. Returns each vertex's within-core degree (in+out,
+    counting each stored edge direction) or -1 if peeled out of the
+    k-core. Oracle: :func:`repro.sparse.ref.kcore_ref`.
+    """
+    (deg, alive), stats = run_program(
+        KCORE, g, mesh, axis=axis, pod_axis=pod_axis, cap=cap,
+        capacity_factor=capacity_factor, config=config, objective=objective,
+        params={"k": float(k)}, max_rounds=max_rounds, seed=seed)
+    return np.where(alive > 0, deg, -1).astype(np.int64), stats

@@ -1,0 +1,752 @@
+"""The TaskProgram runtime — ONE engine executes every sparse app.
+
+The paper frames every workload as owner-routed tasks flowing over a
+software-configured network; a :class:`TaskProgram` is the software
+equivalent of that claim (Tascade / Nexus Machine's task / active-message
+program abstraction): an app is a ~30-line *spec* — edge-payload rule,
+reduce op, frontier-update rule, convergence predicate, task class — and
+:func:`run_program` owns everything the apps used to duplicate:
+
+* ``config=`` launch resolution and the kwargs-conflict checks;
+* :class:`~repro.core.queues.QueueConfig` capacity resolution + clamping
+  (via the shared :func:`~repro.core.routing.resolve_flat_cap` /
+  :func:`~repro.core.routing.resolve_hier_caps`);
+* flat vs pod/portal path selection (iterative apps route hierarchically
+  now, not just the one-round scatters);
+* the cyclic owner layout pack/unpack;
+* the one-round vs ``lax.while_loop`` / ``lax.fori_loop`` execution shape
+  with per-round :class:`AppStats`;
+* a **compile cache** keyed by (program, shapes, mesh, capacities) so
+  repeated same-shape launches reuse the jitted shard_map callable
+  instead of re-tracing (see :func:`cache_stats`).
+
+Program rules are **xp-generic**: they receive a :class:`Ctx` whose
+``xp`` is ``jax.numpy`` inside the shard_map kernel and plain ``numpy``
+in the analytic twin, so one rule definition drives both paths. The twin
+(:func:`program_app_stats` / :func:`program_rounds`) host-simulates the
+*same* rounds — same packed-edge admission order, same
+first-``cap``-per-channel keep rule the shard_map ``bucket`` applies,
+kept-only state updates — and replays each round's task stream through
+``TaskEngine.route``, which is what lets ``repro.dse.shardcheck``
+revalidate *every* app (not just the one-round scatters) with exact
+message/drop agreement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from ..core.compat import shard_map_unchecked
+from ..core.queues import QueueConfig
+from ..core.routing import (owner_route, owner_route_hier, reduce_received,
+                            resolve_flat_cap, resolve_hier_caps)
+from ..core.task_engine import (EngineConfig, RoundStats, RunStats,
+                                TaskEngine)
+from ..core.topology import TileGrid
+
+
+# ---------------------------------------------------------------------------
+# per-round instrumentation (the executable twin of RunStats)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AppStats:
+    """Per-round NoC counters from a distributed run.
+
+    ``messages`` counts routed tasks per round (including owner-local ones —
+    they occupy IQ slots just the same); ``drops`` counts IQ-overflow
+    discards. Convert with :meth:`to_run_stats` for the cost model.
+    """
+    rounds: int
+    messages: np.ndarray          # [rounds] int64
+    drops: np.ndarray             # [rounds] int64
+
+    @property
+    def total_messages(self) -> int:
+        return int(self.messages.sum())
+
+    @property
+    def total_drops(self) -> int:
+        return int(self.drops.sum())
+
+    def to_run_stats(self, payload_words: int = 2,
+                     word_bytes: int = 8) -> RunStats:
+        rs = RunStats()
+        for m, d in zip(self.messages.tolist(), self.drops.tolist()):
+            rs.rounds.append(RoundStats(
+                messages=int(m),
+                payload_bytes=int(m) * payload_words * word_bytes,
+                tasks_total=int(m),
+                drops=int(d)))
+        return rs
+
+
+def _collect_stats(rounds, msgs, drops) -> AppStats:
+    r = int(rounds)
+    return AppStats(rounds=r,
+                    messages=np.asarray(msgs)[:r].astype(np.int64),
+                    drops=np.asarray(drops)[:r].astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# the program spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Ctx:
+    """What a program rule sees, on either execution substrate.
+
+    ``xp`` is ``jax.numpy`` inside the shard_map kernel and ``numpy`` in
+    the analytic twin; ``gsum`` is the cross-shard scalar sum (``psum``
+    under shard_map, identity in the twin, whose arrays are global).
+    Rules must use ``ctx.gsum(ctx.xp.sum(...))`` for global reductions so
+    one definition is correct on both substrates.
+    """
+    xp: object
+    n: int                       # global item count
+    n_dev: int
+    params: Mapping
+    gsum: Callable
+
+
+@dataclass(frozen=True)
+class TaskProgram:
+    """Declarative spec of one DCRA sparse app.
+
+    Graph programs define ``init`` / ``frontier0`` / ``payload`` /
+    ``update`` (xp-generic rules, see :class:`Ctx`); one-round stream
+    programs define only ``stream``. Vertex state is a tuple of f32
+    arrays in the cyclic owner layout; the runtime owns routing,
+    reduction, stats and the loop shape.
+
+    Convergence for ``mode="while"`` is the universal frontier predicate:
+    the loop continues while any shard's frontier is non-empty (and
+    ``r < max_rounds``); ``mode="fixed"`` runs ``params["iters"]`` epochs.
+    """
+    name: str                              # autoconfig app key
+    reduce_op: str = "min"                 # "add" | "min"
+    mode: str = "while"                    # "while" | "fixed" | "single"
+    undirected: bool = False               # route both edge directions
+    active: str = "frontier"               # "frontier" | "all" edges emit
+    task: str = "T3"                       # QueueConfig task class
+    default_capacity_factor: float = 4.0
+    max_rounds: int = 128                  # "while" bound (overridable)
+    # graph rules ----------------------------------------------------------
+    init: Optional[Callable] = None        # (g, params) -> (states, fills)
+    frontier0: Optional[Callable] = None   # (ctx, state) -> bool mask
+    payload: Optional[Callable] = None     # (ctx, state, src_slot, w) -> vals
+    update: Optional[Callable] = None      # (ctx, state, frontier, upd)
+    #                                      #   -> (state2, frontier2)
+    # stream rule ----------------------------------------------------------
+    stream: Optional[Callable] = None      # (data, params, n_dev, seed)
+    #                                      #   -> (dest, vals, n_items)
+
+
+# ---------------------------------------------------------------------------
+# cyclic owner layout (vertex v -> device v % n_dev, slot v // n_dev)
+# ---------------------------------------------------------------------------
+
+def owner_layout(arr_n, n_dev):
+    """Reorder a dense [n] array into cyclic-owner order (device-major)."""
+    n = arr_n.shape[0]
+    n_local = -(-n // n_dev)
+    idx = jnp.arange(n_local * n_dev)
+    src = (idx % n_local) * n_dev + idx // n_local   # device-major -> global
+    valid = src < n
+    return jnp.where(valid, arr_n[jnp.minimum(src, n - 1)], 0), valid
+
+
+def from_owner_layout(y_sharded, n, n_dev):
+    """Inverse of owner_layout: [n_local*n_dev] -> global order [n]."""
+    n_local = -(-n // n_dev)
+    g = jnp.arange(n)
+    pos = (g % n_dev) * n_local + g // n_dev
+    return y_sharded[pos]
+
+
+def _owner_pack_np(arr, n_dev, fill):
+    """numpy owner_layout with a chosen fill for the padding slots."""
+    arr = np.asarray(arr, np.float64)
+    n = len(arr)
+    n_local = -(-n // n_dev)
+    idx = np.arange(n_local * n_dev)
+    g = (idx % n_local) * n_dev + idx // n_local
+    valid = g < n
+    out = np.full(n_local * n_dev, fill, np.float64)
+    out[valid] = arr[g[valid]]
+    return out, valid
+
+
+# ---------------------------------------------------------------------------
+# edge packing (host-side, shared with the analytic twin)
+# ---------------------------------------------------------------------------
+
+def _pack_edges(rows, cols, wts, n_dev, seed=0):
+    """Partition edges by src-vertex owner (device-major flat arrays).
+
+    Returns (src_slot, dst, w, E_max): each [n_dev * E_max]; padding edges
+    carry dst = -1 (owner_route treats them as no-task). Edges are
+    shuffled once so owner buckets fill uniformly, then grouped by owner
+    with a single stable argsort + cumcount (no per-device python loop);
+    the stable sort preserves the shuffled order within each device — the
+    bucket admission order the analytic twin mirrors.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(rows))
+    rows, cols, wts = rows[perm], cols[perm], wts[perm]
+    own = (rows % n_dev).astype(np.int64)
+    order = np.argsort(own, kind="stable")
+    rows, cols, wts, own = rows[order], cols[order], wts[order], own[order]
+    counts = np.bincount(own, minlength=n_dev)
+    E_max = max(8, int(counts.max(initial=0)))
+    starts = np.repeat(np.r_[0, np.cumsum(counts)[:-1]], counts)
+    pos = np.arange(len(rows)) - starts
+    flat = own * E_max + pos
+    src_slot = np.zeros(n_dev * E_max, np.int32)
+    dst = np.full(n_dev * E_max, -1, np.int32)
+    w = np.zeros(n_dev * E_max, np.float32)
+    src_slot[flat] = (rows // n_dev).astype(np.int32)
+    dst[flat] = cols.astype(np.int32)
+    w[flat] = wts
+    return src_slot, dst, w, E_max
+
+
+def _graph_setup(g, n_dev, undirected=False, seed=0):
+    rows, cols, wts = g.row_of(), g.col_idx.astype(np.int64), g.values
+    if undirected:
+        rows, cols = np.concatenate([rows, cols]), np.concatenate([cols,
+                                                                   rows])
+        wts = np.concatenate([wts, wts])
+    src_slot, dst, w, E_max = _pack_edges(rows, cols, wts, n_dev, seed)
+    n_local = -(-g.n // n_dev)
+    return n_local, src_slot, dst, w, E_max
+
+
+# ---------------------------------------------------------------------------
+# launch resolution (config= / kwargs conflicts) — shared by every app
+# ---------------------------------------------------------------------------
+
+def resolve_launch(config, g, app, objective="teps", kwargs_set=()):
+    """Resolve an app's ``config=`` kwarg to a ``LaunchConfig`` (or None).
+
+    ``"auto"`` runs the Pareto-guided selection in
+    :mod:`repro.dse.autoconfig`; a ``LaunchConfig`` passes through; a
+    ``DesignPoint`` is wrapped as an explicit choice. ``None`` keeps the
+    legacy kwarg-driven sizing. ``kwargs_set`` names explicitly-passed
+    sizing kwargs — combining those with ``config=`` is an error, not a
+    silent override.
+    """
+    if config is None:
+        return None
+    if kwargs_set:
+        raise ValueError(f"config= conflicts with explicit {kwargs_set}: "
+                         f"queue sizing comes from the resolved "
+                         f"LaunchConfig, drop one of them")
+    from ..dse.autoconfig import LaunchConfig, autoconfigure, launch_for
+    if isinstance(config, str):
+        if config != "auto":
+            raise ValueError(f"unknown config {config!r} (expected 'auto', "
+                             f"a LaunchConfig or a DesignPoint)")
+        return autoconfigure(g, app, objective=objective)
+    if isinstance(config, LaunchConfig):
+        return config
+    return launch_for(config, g, objective=objective)
+
+
+def _resolve_queues(prog: TaskProgram, queues, cap, capacity_factor):
+    if queues is not None:
+        return queues
+    if cap is not None:
+        return QueueConfig.from_cap(cap, prog.task)
+    if capacity_factor is None:
+        capacity_factor = prog.default_capacity_factor
+    return QueueConfig.from_factor(capacity_factor, prog.task)
+
+
+def _graph_caps(queues: QueueConfig, task: str, e_local: int, n_dev: int,
+                pods: Optional[Tuple[int, int]]) -> Tuple[int, ...]:
+    """Per-round capacities for a graph program, flat or pod/portal.
+
+    Explicit caps are only defined for the flat path (same rule as
+    ``dcra_scatter``); the flat cap is allocation-clamped at ``e_local``.
+    """
+    if queues.iq_sizes.get(task) is not None and pods is not None:
+        raise ValueError("explicit cap is only defined for the flat path")
+    if pods is None:
+        return (resolve_flat_cap(queues, task, e_local, n_dev, clamp=True),)
+    n_intra, n_pods = pods
+    return resolve_hier_caps(queues, task, e_local, n_intra, n_pods)
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# the compile cache
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[tuple, Callable] = {}
+CACHE_STATS = {"hits": 0, "misses": 0, "kernel_traces": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    """Copy of the compile-cache counters (asserted by tests: a repeated
+    same-shape launch must be a ``hits`` increment with ``kernel_traces``
+    unchanged — no re-trace)."""
+    return dict(CACHE_STATS)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    for k in CACHE_STATS:
+        CACHE_STATS[k] = 0
+
+
+def _mesh_key(mesh):
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def _cached(key, build):
+    fn = _CACHE.get(key)
+    if fn is None:
+        CACHE_STATS["misses"] += 1
+        fn = _CACHE[key] = build()
+    else:
+        CACHE_STATS["hits"] += 1
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# the one-round owner-routed scatter (stream programs; public API)
+# ---------------------------------------------------------------------------
+
+def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
+                 capacity_factor: float = 1.5, pod_axis=None,
+                 cap: Optional[int] = None,
+                 queues: Optional[QueueConfig] = None, task: str = "T3"):
+    """Owner-routed scatter-reduce: one NoC round.
+
+    dest/vals: [E] sharded over the device axes (edge-parallel tasks);
+    returns y [n] sharded the same way (cyclic owner layout: item i lives
+    on device i % n_dev at local slot i // n_dev) plus the dropped-task
+    count (queue overflow).
+
+    ``pod_axis`` selects the hierarchical pod/portal two-stage path
+    (paper §III-A): stage 1 aggregates at the per-pod portal over ``axis``
+    (tile-NoC), stage 2 crosses pods exactly once (die-NoC).
+
+    Queue sizing resolves through ONE path — :class:`QueueConfig` — like
+    everywhere else in the repo. ``queues`` names the per-``task`` IQ
+    directly; the legacy ``cap=`` / ``capacity_factor=`` kwargs are sugar
+    for ``QueueConfig.from_cap`` / ``QueueConfig.from_factor`` overrides.
+    Explicit capacities are honored exactly (flat path only — the DSE
+    revalidation sweeps the IQ axis in queue entries, so rounding would
+    validate a different capacity than the analytic model swept);
+    factor-derived capacities keep the lane-aligned round8. Compiled
+    kernels are cached by (shapes, mesh, capacities, op).
+    """
+    n_dev = mesh.devices.size
+    e_local = dest.shape[0] // n_dev
+    n_local = -(-n // n_dev)
+    if queues is None:
+        queues = (QueueConfig.from_cap(cap, task) if cap is not None
+                  else QueueConfig.from_factor(capacity_factor, task))
+    explicit = queues.iq_sizes.get(task, None)
+    if explicit is not None and pod_axis is not None:
+        raise ValueError("explicit cap is only defined for the flat path")
+
+    if pod_axis is None:
+        caps = (resolve_flat_cap(queues, task, e_local, n_dev),)
+        pods = None
+    else:
+        sizes = _axis_sizes(mesh)
+        pods = (sizes[axis], sizes[pod_axis])
+        caps = resolve_hier_caps(queues, task, e_local, *pods)
+
+    key = ("scatter", op, n_local, n_dev, axis, pod_axis, pods, caps,
+           _mesh_key(mesh), int(dest.shape[0]))
+    fn = _cached(key, lambda: _build_scatter_fn(
+        mesh, axis, pod_axis, pods, n_dev, n_local, caps, op))
+    return fn(dest, vals)
+
+
+def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op):
+    spec = P((pod_axis, axis)) if pod_axis else P(axis)
+
+    if pod_axis is None:
+        (cap,) = caps
+
+        def kernel(dest_b, vals_b):
+            CACHE_STATS["kernel_traces"] += 1
+            valid = dest_b >= 0                    # padding -> no task
+            dest_c = jnp.maximum(dest_b, 0)
+            recv_slot, recv_val, n_drop = owner_route(
+                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
+                n_dev, cap, axis)
+            y = reduce_received(recv_slot, recv_val, n_local, op)
+            return y, jax.lax.psum(n_drop, axis)
+    else:
+        n_intra, n_pods = pods
+        cap1, cap2 = caps
+
+        def kernel(dest_b, vals_b):
+            CACHE_STATS["kernel_traces"] += 1
+            valid = dest_b >= 0
+            dest_c = jnp.maximum(dest_b, 0)
+            recv_slot, recv_val, n_drop = owner_route_hier(
+                vals_b, dest_c // n_dev, dest_c % n_dev, valid,
+                n_intra, axis, n_pods, pod_axis, cap1, cap2)
+            y = reduce_received(recv_slot, recv_val, n_local, op)
+            return y, jax.lax.psum(n_drop, (pod_axis, axis))
+
+    return jax.jit(shard_map_unchecked(kernel, mesh=mesh,
+                                       in_specs=(spec, spec),
+                                       out_specs=(spec, P())))
+
+
+# ---------------------------------------------------------------------------
+# the runtime
+# ---------------------------------------------------------------------------
+
+def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
+                capacity_factor: Optional[float] = None,
+                cap: Optional[int] = None,
+                queues: Optional[QueueConfig] = None,
+                config=None, objective="teps",
+                params: Optional[Mapping] = None,
+                max_rounds: Optional[int] = None, seed: int = 0,
+                dataset=None):
+    """Execute a :class:`TaskProgram` on ``mesh``.
+
+    Graph programs return ``(state_arrays, AppStats)`` — each state array
+    unpacked to global order as float64; stream programs return
+    ``(y_global, AppStats)`` with a single round. ``dataset`` overrides
+    what ``config="auto"`` signatures (defaults to ``data``).
+    """
+    params = dict(params or {})
+    kwargs_set = [k for k, v in (("capacity_factor", capacity_factor),
+                                 ("cap", cap)) if v is not None]
+    lc = resolve_launch(config, data if dataset is None else dataset,
+                        prog.name, objective, kwargs_set=kwargs_set)
+    n_dev = mesh.devices.size
+
+    if prog.mode == "single":
+        dest, vals, n_items = prog.stream(data, params, n_dev, seed)
+        if lc is not None:
+            pod_axis = (pod_axis if pod_axis is not None
+                        else lc.pod_axis_for(mesh))
+            queues = lc.device_queues(n_dev, len(dest) // n_dev,
+                                      pod=pod_axis is not None)
+        if queues is None:
+            queues = _resolve_queues(prog, None, cap, capacity_factor)
+        y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals),
+                                     n_items, mesh, axis, op=prog.reduce_op,
+                                     pod_axis=pod_axis, queues=queues,
+                                     task=prog.task)
+        stats = AppStats(rounds=1,
+                         messages=np.array([int((dest >= 0).sum())],
+                                           np.int64),
+                         drops=np.array([int(dropped)], np.int64))
+        return from_owner_layout(y_sh, n_items, n_dev), stats
+
+    # ---- graph program ---------------------------------------------------
+    g = data
+    n = g.n
+    n_local, src_slot, dst, w, E_max = _graph_setup(
+        g, n_dev, undirected=prog.undirected, seed=seed)
+    if lc is not None:
+        pod_axis = (pod_axis if pod_axis is not None
+                    else lc.pod_axis_for(mesh))
+        queues = lc.device_queues(n_dev, E_max, pod=pod_axis is not None)
+    if queues is None:
+        queues = _resolve_queues(prog, None, cap, capacity_factor)
+    if pod_axis is None:
+        pods = None
+    else:
+        sizes = _axis_sizes(mesh)
+        pods = (sizes[axis], sizes[pod_axis])
+    caps = _graph_caps(queues, prog.task, E_max, n_dev, pods)
+
+    states0, fills = prog.init(g, params)
+    packed = tuple(np.asarray(_owner_pack_np(s, n_dev, f)[0], np.float32)
+                   for s, f in zip(states0, fills))
+    if prog.mode == "fixed":
+        rounds = int(params["iters"])
+    else:
+        rounds = int(max_rounds if max_rounds is not None
+                     else prog.max_rounds)
+
+    key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
+           rounds, len(packed), tuple(sorted(params.items())),
+           _mesh_key(mesh))
+    fn = _cached(key, lambda: _build_graph_fn(
+        prog, mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
+        params, rounds, len(packed)))
+    out = fn(src_slot, dst, w, *packed)
+    states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
+    stats = _collect_stats(r, msgs, drops)
+    states_np = tuple(np.asarray(from_owner_layout(s, n, n_dev), np.float64)
+                      for s in states)
+    return states_np, stats
+
+
+def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
+                    caps, params, rounds, n_states):
+    spec = P((pod_axis, axis)) if pod_axis else P(axis)
+    axes = (pod_axis, axis) if pod_axis else axis
+
+    def gsum(x):
+        return jax.lax.psum(x, axes)
+
+    ctx = Ctx(xp=jnp, n=n, n_dev=n_dev, params=params, gsum=gsum)
+
+    def kernel(src_slot_b, dst_b, w_b, *state_b):
+        CACHE_STATS["kernel_traces"] += 1
+        owner = jnp.maximum(dst_b, 0) % n_dev
+        slot = jnp.maximum(dst_b, 0) // n_dev
+        evalid = dst_b >= 0
+
+        def do_round(state, frontier):
+            active = (frontier[src_slot_b] & evalid
+                      if prog.active == "frontier" else evalid)
+            vals = prog.payload(ctx, state, src_slot_b,
+                                w_b).astype(jnp.float32)
+            m = gsum(jnp.sum(active.astype(jnp.int32)))
+            if pod_axis is None:
+                recv_slot, recv_val, nd = owner_route(
+                    vals, slot, owner, active, n_dev, caps[0], axis)
+            else:
+                recv_slot, recv_val, nd = owner_route_hier(
+                    vals, slot, owner, active, pods[0], axis, pods[1],
+                    pod_axis, caps[0], caps[1])
+            upd = reduce_received(recv_slot, recv_val, n_local,
+                                  prog.reduce_op)
+            state2, frontier2 = prog.update(ctx, state, frontier, upd)
+            return state2, frontier2, m, gsum(nd.astype(jnp.int32))
+
+        zeros = jnp.zeros((rounds,), jnp.int32)
+        frontier0 = prog.frontier0(ctx, state_b)
+        if prog.mode == "while":
+            def cond(s):
+                _, _, r, _, _, changed = s
+                return changed & (r < rounds)
+
+            def body(s):
+                state, frontier, r, msgs, drops, _ = s
+                state2, frontier2, m, nd = do_round(state, frontier)
+                changed = gsum(jnp.sum(frontier2.astype(jnp.int32))) > 0
+                return (state2, frontier2, r + 1, msgs.at[r].set(m),
+                        drops.at[r].set(nd), changed)
+
+            state, _, r, msgs, drops, _ = jax.lax.while_loop(
+                cond, body, (state_b, frontier0, jnp.int32(0), zeros,
+                             zeros, jnp.bool_(True)))
+        else:                                                  # "fixed"
+            def body(i, s):
+                state, frontier, msgs, drops = s
+                state2, frontier2, m, nd = do_round(state, frontier)
+                return (state2, frontier2, msgs.at[i].set(m),
+                        drops.at[i].set(nd))
+
+            state, _, msgs, drops = jax.lax.fori_loop(
+                0, rounds, body, (state_b, frontier0, zeros, zeros))
+            r = jnp.int32(rounds)
+        return (*state, r, msgs, drops)
+
+    in_specs = (spec, spec, spec) + (spec,) * n_states
+    out_specs = (spec,) * n_states + (P(), P(), P())
+    return jax.jit(shard_map_unchecked(kernel, mesh=mesh,
+                                       in_specs=in_specs,
+                                       out_specs=out_specs))
+
+
+# ---------------------------------------------------------------------------
+# the analytic twin: host mirror + TaskEngine replay
+# ---------------------------------------------------------------------------
+
+def _bucket_positions(chan, active):
+    """Stable per-channel cumcount of the active tasks, in array order —
+    the admission order of the shard_map ``bucket``. -1 where inactive."""
+    pos = np.full(len(chan), -1, np.int64)
+    idx = np.flatnonzero(active)
+    if not len(idx):
+        return pos
+    k = chan[idx]
+    order = np.argsort(k, kind="stable")
+    ks = k[order]
+    starts = np.r_[0, np.flatnonzero(ks[1:] != ks[:-1]) + 1]
+    sizes = np.diff(np.r_[starts, len(ks)])
+    p = np.arange(len(ks)) - np.repeat(starts, sizes)
+    out = np.empty(len(ks), np.int64)
+    out[order] = p
+    pos[idx] = out
+    return pos
+
+
+def _flat_keep(dev_of, owner, active, cap, n_dev):
+    pos = _bucket_positions(dev_of * n_dev + owner, active)
+    keep = active & (pos < cap)
+    return keep, int(active.sum() - keep.sum())
+
+
+def _hier_keep(dev_of, owner, active, caps, pods):
+    """Two-stage pod/portal keep rule (mirrors ``owner_route_hier``):
+    stage 1 admits per (sender, dest-intra-coordinate) channel at cap1;
+    stage 2 admits at the portal per dest pod at cap2, in the receive
+    order the tiled all_to_all produces (sender intra rank, then stage-1
+    slot)."""
+    n_intra, n_pods = pods
+    cap1, cap2 = caps
+    e_coord = owner % n_intra
+    p_coord = owner // n_intra
+    pos1 = _bucket_positions(dev_of * n_intra + e_coord, active)
+    keep1 = active & (pos1 < cap1)
+    drop1 = int(active.sum() - keep1.sum())
+    portal = (dev_of // n_intra) * n_intra + e_coord
+    idx = np.flatnonzero(keep1)
+    arr = idx[np.lexsort((pos1[idx], dev_of[idx] % n_intra, portal[idx]))]
+    chan2 = (portal * n_pods + p_coord)[arr]
+    pos2 = _bucket_positions(chan2, np.ones(len(arr), bool))
+    keep = np.zeros(len(active), bool)
+    keep[arr[pos2 < cap2]] = True
+    drop2 = int(len(arr) - keep.sum())
+    return keep, drop1 + drop2
+
+
+def program_rounds(prog: TaskProgram, g, n_dev, caps, params=None, seed=0,
+                   pods=None, max_rounds=None, setup=None):
+    """Host mirror of :func:`run_program`'s round loop for a graph
+    program: yields, per executable round, the routed task stream
+    ``(src_global, dst_global, n_drop)`` — *all* active tasks, with the
+    drop count of the first-``cap``-per-channel keep rule — while
+    evolving vertex state with kept-only updates, exactly as the
+    shard_map path does. Deterministic: shares ``_pack_edges`` (and its
+    admission order) with the executable. ``setup`` short-circuits the
+    edge packing with a precomputed ``_graph_setup`` result.
+    """
+    params = dict(params or {})
+    n = g.n
+    n_local, src_slot, dst, w, E_max = (
+        setup if setup is not None
+        else _graph_setup(g, n_dev, undirected=prog.undirected, seed=seed))
+    dev_of = np.repeat(np.arange(n_dev), E_max)
+    evalid = dst >= 0
+    dstl = dst.astype(np.int64)
+    owner = np.where(evalid, dstl % n_dev, 0)
+    src_global = src_slot.astype(np.int64) * n_dev + dev_of
+    # the kernel indexes shard-local state with src_slot; the mirror's
+    # state is the full device-major packed array, so offset by device
+    psrc = dev_of * n_local + src_slot
+
+    ctx = Ctx(xp=np, n=n, n_dev=n_dev, params=params,
+              gsum=lambda x: x)
+    states0, fills = prog.init(g, params)
+    state = tuple(np.asarray(_owner_pack_np(s, n_dev, f)[0], np.float32)
+                  for s, f in zip(states0, fills))
+    frontier = np.asarray(prog.frontier0(ctx, state), bool)
+    if prog.mode == "fixed":
+        rounds = int(params["iters"])
+    else:
+        rounds = int(max_rounds if max_rounds is not None
+                     else prog.max_rounds)
+
+    changed, r = True, 0
+    while r < rounds and (prog.mode == "fixed" or changed):
+        active = (frontier[psrc] & evalid
+                  if prog.active == "frontier" else evalid.copy())
+        vals = np.asarray(prog.payload(ctx, state, psrc, w), np.float32)
+        if pods is None:
+            keep, n_drop = _flat_keep(dev_of, owner, active, caps[0], n_dev)
+        else:
+            keep, n_drop = _hier_keep(dev_of, owner, active, caps, pods)
+        kd = dstl[keep]
+        kidx = (kd % n_dev) * n_local + kd // n_dev
+        if prog.reduce_op == "min":
+            upd = np.full(n_dev * n_local, np.inf, np.float32)
+            np.minimum.at(upd, kidx, vals[keep])
+        else:
+            upd = np.zeros(n_dev * n_local, np.float32)
+            np.add.at(upd, kidx, vals[keep])
+        yield src_global[active], dstl[active], n_drop
+        state, frontier = prog.update(ctx, state, frontier, upd)
+        frontier = np.asarray(frontier, bool)
+        changed = bool(frontier.any())
+        r += 1
+
+
+def program_app_stats(prog: TaskProgram, data, n_dev, *,
+                      queues: Optional[QueueConfig] = None,
+                      cap: Optional[int] = None,
+                      capacity_factor: Optional[float] = None,
+                      params=None, seed=0,
+                      pods: Optional[Tuple[int, int]] = None,
+                      max_rounds=None) -> AppStats:
+    """The analytic twin of one program launch.
+
+    Generates the program's task stream (:func:`program_rounds` /
+    ``prog.stream``) and replays each flat round through
+    ``TaskEngine.route`` on a ``TileGrid(1, n_dev)`` with the capacity
+    resolved through the SAME :class:`QueueConfig` path the executable
+    uses — the per-(source shard -> owner) channel structure is
+    identical, so per-round message/drop counts must match the
+    executable's :class:`AppStats` exactly. The pod/portal path is
+    counted by the two-stage channel mirror (``TaskEngine`` models a
+    single flat channel set).
+    """
+    params = dict(params or {})
+    queues = _resolve_queues(prog, queues, cap, capacity_factor)
+
+    if prog.mode == "single":
+        dest, _, n_items = prog.stream(data, params, n_dev, seed)
+        e_local = len(dest) // n_dev
+        dev_of = np.repeat(np.arange(n_dev), e_local)
+        active = dest >= 0
+        if pods is None:
+            rcap = resolve_flat_cap(queues, prog.task, e_local, n_dev)
+            engine = TaskEngine(EngineConfig(
+                grid=TileGrid(1, n_dev),
+                queues=QueueConfig(default_iq=rcap)), n_items)
+            rs = engine.route(prog.task, src_idx=dev_of[active],
+                              dst_idx=dest[active].astype(np.int64))
+            return AppStats(rounds=1,
+                            messages=np.array([rs.tasks_total], np.int64),
+                            drops=np.array([rs.drops], np.int64))
+        caps = resolve_hier_caps(queues, prog.task, e_local, *pods)
+        owner = np.where(active, dest.astype(np.int64) % n_dev, 0)
+        _, n_drop = _hier_keep(dev_of, owner, active, caps, pods)
+        return AppStats(rounds=1,
+                        messages=np.array([int(active.sum())], np.int64),
+                        drops=np.array([n_drop], np.int64))
+
+    # graph program: mirror the rounds, replay flat rounds through route()
+    setup = _graph_setup(data, n_dev, undirected=prog.undirected, seed=seed)
+    caps = _graph_caps(queues, prog.task, setup[-1], n_dev, pods)
+    msgs, drops = [], []
+    engine = None
+    if pods is None:
+        engine = TaskEngine(EngineConfig(
+            grid=TileGrid(1, n_dev),
+            queues=QueueConfig(default_iq=caps[0])), data.n)
+    for src, dst, n_drop in program_rounds(prog, data, n_dev, caps,
+                                           params=params, seed=seed,
+                                           pods=pods, max_rounds=max_rounds,
+                                           setup=setup):
+        if engine is not None:
+            rs = engine.route(prog.task, src_idx=src, dst_idx=dst)
+            assert rs.drops == n_drop, (rs.drops, n_drop)  # model coherence
+            msgs.append(rs.tasks_total)
+            drops.append(rs.drops)
+        else:
+            msgs.append(len(dst))
+            drops.append(n_drop)
+    return AppStats(rounds=len(msgs),
+                    messages=np.asarray(msgs, np.int64),
+                    drops=np.asarray(drops, np.int64))

@@ -1,4 +1,4 @@
-"""Pure-numpy oracles for the six paper applications (§IV-A).
+"""Pure-numpy oracles for the paper applications (§IV-A) plus k-core.
 
 Independent implementations (no task engine, no tile grid) used to verify
 the DCRA execution paths bit-for-bit / to float tolerance.
@@ -81,3 +81,22 @@ def spmv_ref(g: CSR, x: np.ndarray) -> np.ndarray:
 
 def histogram_ref(elements: np.ndarray, n_bins: int) -> np.ndarray:
     return np.bincount(elements, minlength=n_bins).astype(np.int64)
+
+
+def kcore_ref(g: CSR, k: int) -> np.ndarray:
+    """k-core by iterative peel on the undirected view (degree counts each
+    stored edge direction, like ``wcc_ref``'s both-ways propagation).
+
+    Returns each surviving vertex's within-core degree, -1 if peeled.
+    """
+    src = np.concatenate([g.row_of(), g.col_idx.astype(np.int64)])
+    dst = np.concatenate([g.col_idx.astype(np.int64), g.row_of()])
+    deg = np.bincount(src, minlength=g.n).astype(np.int64)
+    alive = np.ones(g.n, bool)
+    frontier = alive & (deg < k)
+    while frontier.any():
+        dec = np.bincount(dst[frontier[src]], minlength=g.n)
+        alive &= ~frontier
+        deg = deg - dec
+        frontier = alive & (deg < k)
+    return np.where(alive, deg, -1).astype(np.int64)

@@ -81,13 +81,14 @@ def test_selection_is_deterministic_for_a_fixed_bench(bench, quick_data):
 
 def test_selection_respects_the_objective_ordering(bench, quick_data):
     """The frontier argmax really is the argmax of the interpolated
-    objective, for every supported objective."""
+    objective over the app's frontier slice, for every supported
+    objective."""
     g = quick_data[sorted(quick_data)[0]]
     sig = signature_of(g)
     sigs = bench_signatures(bench)
     dists = {d: signature_distance(sig, s) for d, s in sigs.items()}
     from repro.dse.autoconfig import frontier_records
-    records = frontier_records(bench)
+    records = frontier_records(bench, "bfs")
     assert records
     for objective in ("teps", "watts", "usd", {"teps": 0.7, "watts": 0.3}):
         weights = objective_weights(objective)
@@ -96,6 +97,53 @@ def test_selection_respects_the_objective_ordering(bench, quick_data):
                                   *interpolate_record(r, "bfs", dists))
                   for r in records]
         assert score == pytest.approx(max(scores))
+
+
+def test_selection_ranks_on_the_app_frontier_slice():
+    """Schema v2: when the bench records app-specific Pareto slices, the
+    selection for an app considers ONLY that app's slice — a globally
+    Pareto point excluded from the slice must not win."""
+    sig = DatasetSignature(n=256, nnz=4096, skew=1.0)
+    from repro.dse.space import DesignPoint
+
+    def rec(pid, iq, teps):
+        return {"point_id": pid, "pareto": True,
+                "config": DesignPoint(iq_capacity=iq).to_dict(),
+                "metrics": {"teps_geomean": teps, "watts_geomean": 1.0,
+                            "system_usd": 100.0},
+                "per_cell": {f"{app}:D": {"teps": teps, "seconds": 1.0,
+                                          "energy_j": 1.0}
+                             for app in ("bfs", "spmv")}}
+
+    bench = {
+        "schema": "dcra-dse-bench/v2",
+        "dataset_signatures": {"D": sig.to_dict()},
+        "datasets": ["D"],
+        "points": [rec("slow_bfs_ok", 12, 50.0),
+                   rec("fast_global", 48, 100.0)],
+        "app_frontiers": {"bfs": ["slow_bfs_ok"],
+                          "spmv": ["slow_bfs_ok", "fast_global"]},
+    }
+    w = objective_weights("teps")
+    point, _, dist = select_from_frontier(bench, sig, "bfs", w)
+    assert dist == 0.0 and point.iq_capacity == 12   # slice-restricted
+    point, _, _ = select_from_frontier(bench, sig, "spmv", w)
+    assert point.iq_capacity == 48                   # full slice, argmax
+    # an app without a slice falls back to the global frontier
+    point, _, _ = select_from_frontier(bench, sig, "wcc", w)
+    assert point.iq_capacity == 48
+
+
+def test_committed_bench_carries_per_app_slices(bench):
+    """The regenerated BENCH_dse.json is schema v2 with a non-empty
+    frontier slice per swept app (incl. the seventh app, kcore)."""
+    assert bench["schema"] == "dcra-dse-bench/v2"
+    fronts = bench["app_frontiers"]
+    assert set(bench["apps"]) <= set(fronts)
+    assert "kcore" in fronts
+    ids = {r["point_id"] for r in bench["points"]}
+    for app, pids in fronts.items():
+        assert pids and set(pids) <= ids
 
 
 def test_objectives_can_disagree_on_a_synthetic_tradeoff():
@@ -196,6 +244,67 @@ def test_config_conflicts_with_explicit_sizing_kwargs(quick_data):
         dcra_bfs(g, 0, mesh=None, capacity_factor=2.0, config="auto")
     with pytest.raises(ValueError, match="conflicts"):
         dcra_spmv(g, np.ones(g.n), mesh=None, cap=4, config="auto")
+
+
+# ---------------------------------------------------------------------------
+# Part A: MoE dispatch auto-configuration (capacity factor from load)
+# ---------------------------------------------------------------------------
+
+def test_moe_autoconfig_uniform_load_picks_the_smallest_factor():
+    from repro.core.queues import QueueConfig
+    from repro.dse.autoconfig import (MOE_FACTOR_LADDER, autoconfigure_moe,
+                                      moe_dispatch_signature)
+    E, shards = 16, 8
+    # block-cyclic assignment: every (sender, owner-shard) channel carries
+    # exactly tasks_per_sender / n_shards tasks — the f=1.0 capacity
+    ids = (np.arange(4096) // shards) % E
+    sig = moe_dispatch_signature(ids, E)
+    assert sig.peak_frac == pytest.approx(1.0 / E)
+    f, q = autoconfigure_moe(ids, E, shards)
+    assert f == MOE_FACTOR_LADDER[0]
+    # the returned QueueConfig IS the dispatch sizing (single source)
+    ref_q = QueueConfig.for_moe_dispatch(f)
+    for task in ("dispatch", "portal", "expert"):
+        assert q.channel_cap(task, 4096, 8) == ref_q.channel_cap(task,
+                                                                 4096, 8)
+
+
+def test_moe_autoconfig_skewed_load_needs_a_larger_factor():
+    from repro.dse.autoconfig import autoconfigure_moe, moe_dispatch_signature
+    rng = np.random.default_rng(1)
+    E, shards, T = 16, 8, 4096
+    uniform = rng.integers(0, E, T)
+    hot = np.where(rng.random(T) < 0.8, 0, uniform)       # 80% on expert 0
+    sig_u = moe_dispatch_signature(uniform, E)
+    sig_h = moe_dispatch_signature(hot, E)
+    assert sig_h.peak_frac > sig_u.peak_frac
+    assert sig_h.cv > sig_u.cv
+    f_u, _ = autoconfigure_moe(uniform, E, shards)
+    f_h, _ = autoconfigure_moe(hot, E, shards)
+    assert f_h > f_u
+
+
+def test_moe_autoconfig_models_contiguous_token_sharding():
+    """moe_dcra shards tokens as contiguous blocks, so a locally
+    correlated run (one shard's whole block routed to one expert) must
+    raise the factor even when the GLOBAL expert histogram looks mild —
+    a round-robin sender model would hide exactly that hotspot."""
+    from repro.dse.autoconfig import autoconfigure_moe
+    E, shards, T = 16, 8, 4096
+    uniform = (np.arange(T) // shards) % E
+    correlated = uniform.copy()
+    correlated[:T // shards] = 0          # sender 0's block: all expert 0
+    f_u, _ = autoconfigure_moe(uniform, E, shards)
+    f_c, _ = autoconfigure_moe(correlated, E, shards)
+    assert f_c > f_u
+
+
+def test_moe_autoconfig_is_deterministic_and_handles_empty():
+    from repro.dse.autoconfig import MOE_FACTOR_LADDER, autoconfigure_moe
+    ids = np.arange(64) % 7
+    assert autoconfigure_moe(ids, 8, 4) == autoconfigure_moe(ids, 8, 4)
+    f, _ = autoconfigure_moe(np.array([], np.int64), 8, 4)
+    assert f == MOE_FACTOR_LADDER[0]
 
 
 def test_launch_for_wraps_an_explicit_point(quick_data):

@@ -34,6 +34,19 @@ def test_hier_reduces_long_distance_hops():
     assert hier.avg_uniform_hops() < flat.avg_uniform_hops()
 
 
+@pytest.mark.parametrize("topology", ["mesh", "torus"])
+@pytest.mark.parametrize("shape", [(4, 6), (5, 5), (8, 8), (7, 3)])
+def test_avg_uniform_hops_closed_form_is_exact(topology, shape):
+    """The flat-topology closed form equals the exhaustive mean over ALL
+    (src, dst) pairs — including odd torus extents and src == dst."""
+    r, c = shape
+    g = TileGrid(r, c, topology, die_rows=max(r // 2, 1),
+                 die_cols=max(c // 2, 1))
+    s = np.repeat(np.arange(g.n_tiles), g.n_tiles)
+    d = np.tile(np.arange(g.n_tiles), g.n_tiles)
+    assert g.avg_uniform_hops() == pytest.approx(float(g.hops(s, d).mean()))
+
+
 @settings(max_examples=25, deadline=None)
 @given(r=st.sampled_from([4, 8, 16]), c=st.sampled_from([4, 8, 16]),
        seed=st.integers(0, 1000))

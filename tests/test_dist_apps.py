@@ -1,11 +1,11 @@
-"""Differential tests: all SIX paper apps on the distributed owner-routed
-path vs the numpy oracles in ``sparse/ref.py``.
+"""Differential tests: all SEVEN apps (the paper's six + k-core) on the
+distributed owner-routed path vs the numpy oracles in ``sparse/ref.py``.
 
 Coverage matrix (subprocess, 8 fake host devices):
-  * Erdős–Rényi + power-law (wiki-like) graphs, 8 devices, all six apps;
+  * Erdős–Rényi + power-law (wiki-like) graphs, 8 devices, all apps;
   * a disconnected graph for BFS (unreachable -> -1) and WCC (two
     components keep distinct labels);
-  * a second device count (4) over ER for all six apps — the result must
+  * a second device count (4) over ER for all apps — the result must
     be layout-independent.
 """
 import json
@@ -22,8 +22,9 @@ import json
 import numpy as np
 from repro.core.compat import make_mesh
 from repro.sparse import datasets, ref
-from repro.sparse.jax_apps import (dcra_bfs, dcra_histogram, dcra_pagerank,
-                                   dcra_spmv, dcra_sssp, dcra_wcc)
+from repro.sparse.jax_apps import (dcra_bfs, dcra_histogram, dcra_kcore,
+                                   dcra_pagerank, dcra_spmv, dcra_sssp,
+                                   dcra_wcc)
 
 def run_six(g, mesh, tag, res):
     x = np.random.default_rng(0).random(g.n)
@@ -58,6 +59,10 @@ def run_six(g, mesh, tag, res):
     res[f'{tag}/wcc'] = {
         'err': float(np.max(np.abs(w_ - ref.wcc_ref(g)))),
         'drops': st.total_drops, 'rounds': st.rounds}
+    k_, st = dcra_kcore(g, 12, mesh)
+    res[f'{tag}/kcore'] = {
+        'err': float(np.max(np.abs(k_ - ref.kcore_ref(g, 12)))),
+        'drops': st.total_drops, 'rounds': st.rounds}
 
 res = {}
 mesh8 = make_mesh((8,), ('data',))
@@ -87,7 +92,8 @@ print('RESULT ' + json.dumps(res))
 """
 
 CASES = [f"{tag}/{app}" for tag in ("er8", "pl8", "er4")
-         for app in ("spmv", "histogram", "bfs", "sssp", "pagerank", "wcc")]
+         for app in ("spmv", "histogram", "bfs", "sssp", "pagerank", "wcc",
+                     "kcore")]
 
 
 @pytest.fixture(scope="module")

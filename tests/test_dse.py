@@ -309,6 +309,45 @@ def test_compare_flags_objective_best_regression():
     assert not ok
 
 
+def _bench_with_slices(points):
+    """v2 bench: one app slice ('bfs') over all points."""
+    b = _bench_with([(pid, t, w, c) for pid, t, w, c, _ in points])
+    b["schema"] = "dcra-dse-bench/v2"
+    for rec, (_, _, _, _, bfs_teps) in zip(b["points"], points):
+        rec["per_cell"] = {"bfs:D": {"teps": bfs_teps, "seconds": 1.0,
+                                     "energy_j": 1.0}}
+    b["app_frontiers"] = {"bfs": [r["point_id"] for r in b["points"]]}
+    return b
+
+
+def test_compare_flags_per_app_slice_regression():
+    old = _bench_with_slices([("p1", 100.0, 5.0, 40.0, 90.0)])
+    new = _bench_with_slices([("p1", 100.0, 5.0, 40.0, 60.0)])  # -33% bfs
+    failures, _ = dse_compare.compare(old, new, tol=0.05)
+    assert failures and any("bfs" in f for f in failures)
+    ok, notes = dse_compare.compare(old, old, tol=0.05)
+    assert not ok and any("bfs" in n for n in notes)
+
+
+def test_compare_notes_v1_v2_schema_mix():
+    old = _bench_with([("p1", 100.0, 5.0, 40.0)])          # v1: no slices
+    new = _bench_with_slices([("p1", 100.0, 5.0, 40.0, 90.0)])
+    failures, notes = dse_compare.compare(old, new, tol=0.05)
+    assert not failures
+    assert any("one side only" in n for n in notes)
+
+
+def test_compare_rejects_unknown_schema(tmp_path):
+    good = _bench_with([("p1", 100.0, 5.0, 40.0)])
+    bad = dict(good, schema="dcra-dse-bench/v99")
+    pg, pb = str(tmp_path / "g.json"), str(tmp_path / "b.json")
+    with open(pg, "w") as f:
+        json.dump(good, f)
+    with open(pb, "w") as f:
+        json.dump(bad, f)
+    assert dse_compare.main([pg, pb]) == 1
+
+
 def test_compare_cli_exit_codes(tmp_path):
     old_p, new_p = str(tmp_path / "old.json"), str(tmp_path / "new.json")
     with open(old_p, "w") as f:
@@ -328,7 +367,8 @@ def test_compare_cli_exit_codes(tmp_path):
 def shardcheck_results():
     spec = {"n_dev": 8, "scale": 8, "seed": 0,
             "checks": [{"point_id": f"iq{iq}", "iq_capacity": iq,
-                        "apps": ["spmv", "histogram", "histogram_self"]}
+                        "apps": ["spmv", "histogram", "histogram_self",
+                                 "bfs", "wcc", "kcore"]}
                        for iq in (8, 64)]}
     out = subprocess.run(
         [sys.executable, "-m", "repro.dse.shardcheck"],
@@ -341,10 +381,20 @@ def shardcheck_results():
 
 
 def test_shardcheck_agrees_for_swept_capacities(shardcheck_results):
-    assert len(shardcheck_results) == 6          # 2 caps x 3 apps
+    assert len(shardcheck_results) == 12         # 2 caps x 6 apps
     for r in shardcheck_results:
         assert r["ok"], r
         assert r["executable"] == r["analytic"]
+
+
+def test_shardcheck_covers_iterative_task_programs(shardcheck_results):
+    """The revalidation now replays the iterative apps' TaskProgram twins
+    too — multi-round trajectories, not just the one-round scatters."""
+    iterative = [r for r in shardcheck_results
+                 if r["app"] in ("bfs", "wcc", "kcore")]
+    assert len(iterative) == 6
+    assert all(r["ok"] for r in iterative)
+    assert all(r["executable"]["rounds"] > 1 for r in iterative)
 
 
 def test_shardcheck_exercises_the_overflow_path(shardcheck_results):
@@ -383,7 +433,7 @@ def quick_bench():
 
 def test_quick_sweep_meets_the_bench_contract(quick_bench):
     b = quick_bench
-    assert b["schema"] == "dcra-dse-bench/v1"
+    assert b["schema"] == "dcra-dse-bench/v2"
     valid = [r for r in b["points"] if "metrics" in r]
     assert len(valid) >= 24                      # evaluated config points
     assert len(b["apps"]) >= 3                   # across >= 3 apps
@@ -394,6 +444,11 @@ def test_quick_sweep_meets_the_bench_contract(quick_bench):
         m = r["metrics"]
         assert m["teps_geomean"] > 0 and m["package_usd"] > 0
         assert np.isfinite(m["watts_geomean"])
+    # schema v2: one Pareto slice per swept app, ids drawn from the points
+    ids = {r["point_id"] for r in valid}
+    assert set(b["app_frontiers"]) == set(b["apps"])
+    for app, pids in b["app_frontiers"].items():
+        assert pids and set(pids) <= ids, app
 
 
 def test_quick_sweep_revalidates_a_winner_on_shard_map(quick_bench):
@@ -401,3 +456,6 @@ def test_quick_sweep_revalidates_a_winner_on_shard_map(quick_bench):
     assert reval, "top-K winners must be revalidated on the executables"
     assert all(r["ok"] for r in reval)
     assert {r["point_id"] for r in reval} <= set(quick_bench["pareto"])
+    # ... and the revalidation spans every app, iterative ones included
+    from repro.dse.sweep import REVALIDATION_APPS
+    assert {r["app"] for r in reval} == set(REVALIDATION_APPS)

@@ -1,0 +1,232 @@
+"""The TaskProgram runtime (:mod:`repro.sparse.program`).
+
+Part A — in-process properties: the vectorised edge packer matches a
+per-device reference, the owner layout round-trips.
+
+Part B (subprocess, 8 fake host devices) — the analytic-twin contract:
+for EVERY program (all seven apps) on 1/2/4/8 devices, the executable's
+per-round message/drop trajectory must equal the twin's
+(``program_app_stats`` replaying the generated task stream through
+``TaskEngine.route``), with tight explicit caps actually dropping; the
+pod/portal path agrees against the two-stage channel mirror; k-core (the
+seventh app, a pure program definition) matches its numpy oracle with a
+partial peel; and repeated same-shape launches hit the compile cache
+without re-tracing.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+APPS = ("bfs", "sssp", "wcc", "pagerank", "kcore", "spmv", "histogram")
+DEVS = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Part A: host-side pieces
+# ---------------------------------------------------------------------------
+
+def _pack_edges_reference(rows, cols, wts, n_dev, seed=0):
+    """The pre-vectorisation per-device packer (kept as the oracle)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(rows))
+    rows, cols, wts = rows[perm], cols[perm], wts[perm]
+    own = (rows % n_dev).astype(np.int64)
+    counts = np.bincount(own, minlength=n_dev)
+    E_max = max(8, int(counts.max()))
+    src_slot = np.zeros((n_dev, E_max), np.int32)
+    dst = np.full((n_dev, E_max), -1, np.int32)
+    w = np.zeros((n_dev, E_max), np.float32)
+    for d in range(n_dev):
+        sel = own == d
+        k = int(counts[d])
+        src_slot[d, :k] = (rows[sel] // n_dev).astype(np.int32)
+        dst[d, :k] = cols[sel].astype(np.int32)
+        w[d, :k] = wts[sel]
+    return (src_slot.reshape(-1), dst.reshape(-1), w.reshape(-1), E_max)
+
+
+@pytest.mark.parametrize("n_dev", [1, 3, 8])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_pack_edges_matches_per_device_reference(n_dev, seed):
+    from repro.sparse.program import _pack_edges
+    rng = np.random.default_rng(seed + 100)
+    E, n = 500, 64
+    rows = rng.integers(0, n, E)
+    cols = rng.integers(0, n, E)
+    wts = rng.random(E).astype(np.float32)
+    got = _pack_edges(rows, cols, wts, n_dev, seed)
+    want = _pack_edges_reference(rows, cols, wts, n_dev, seed)
+    assert got[3] == want[3]
+    for g_arr, w_arr in zip(got[:3], want[:3]):
+        assert np.array_equal(np.asarray(g_arr), w_arr)
+
+
+def test_pack_edges_empty():
+    from repro.sparse.program import _pack_edges
+    e = np.array([], np.int64)
+    src_slot, dst, w, E_max = _pack_edges(e, e, e.astype(np.float32), 4)
+    assert E_max == 8 and (np.asarray(dst) == -1).all()
+
+
+def test_owner_layout_round_trips():
+    from repro.sparse.program import from_owner_layout, owner_layout
+    rng = np.random.default_rng(3)
+    for n, n_dev in ((17, 4), (32, 8), (5, 8)):
+        arr = rng.random(n)
+        packed, valid = owner_layout(arr, n_dev)
+        assert int(np.asarray(valid).sum()) == n
+        back = np.asarray(from_owner_layout(packed, n, n_dev))
+        assert np.allclose(back, arr)
+
+
+# ---------------------------------------------------------------------------
+# Part B: the analytic-twin contract under shard_map (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.sparse import datasets, program, ref
+from repro.sparse.jax_apps import PROGRAMS, dcra_bfs, dcra_kcore
+from repro.sparse.program import program_app_stats, run_program
+
+g = datasets.wiki_like(256, avg_degree=8, seed=7)
+x = np.random.default_rng(0).random(g.n)
+els = datasets.histogram_data(1 << 11, 64, seed=4)
+PARAMS = {'bfs': {'root': 0}, 'sssp': {'root': 0}, 'wcc': {},
+          'pagerank': {'damping': 0.85, 'iters': 4}, 'kcore': {'k': 8.0},
+          'spmv': {}, 'histogram': {}}
+DATA = {'spmv': (g, x), 'histogram': (els, 64)}
+
+res = {'parity': [], 'pod': [], 'cache': {}, 'results': {}}
+
+def parity_case(app, n_dev, tag, stats, twin):
+    return {'app': app, 'n_dev': n_dev, 'cap': tag,
+            'ok': (stats.rounds == twin.rounds
+                   and np.array_equal(stats.messages, twin.messages)
+                   and np.array_equal(stats.drops, twin.drops)),
+            'rounds': stats.rounds, 'msgs': stats.total_messages,
+            'drops': stats.total_drops,
+            'twin_drops': twin.total_drops}
+
+for n_dev in (1, 2, 4, 8):
+    mesh = make_mesh((n_dev,), ('data',))
+    for app, prog in PROGRAMS.items():
+        data = DATA.get(app, g)
+        caps = (2, 96) if n_dev in (1, 8) else (2,)
+        for cap in caps:
+            _, stats = run_program(prog, data, mesh, cap=cap,
+                                   params=PARAMS[app])
+            twin = program_app_stats(prog, data, n_dev, cap=cap,
+                                     params=PARAMS[app])
+            res['parity'].append(parity_case(app, n_dev, cap, stats, twin))
+
+# ---- pod/portal path: two-stage channel mirror (every program) ----
+hier = make_mesh((2, 4), ('pod', 'data'))
+for app, prog in PROGRAMS.items():
+    data = DATA.get(app, g)
+    for cf in (0.25, 4.0):
+        _, stats = run_program(prog, data, hier, pod_axis='pod',
+                               capacity_factor=cf, params=PARAMS[app])
+        twin = program_app_stats(prog, data, 8, capacity_factor=cf,
+                                 params=PARAMS[app], pods=(4, 2))
+        res['pod'].append(parity_case(app, 8, f'cf{cf}', stats, twin))
+
+# ---- the seventh app vs its oracle (flat + pod, drop-free sizing) ----
+mesh8 = make_mesh((8,), ('data',))
+k_, st = dcra_kcore(g, 8, mesh8)
+want = ref.kcore_ref(g, 8)
+res['results']['kcore'] = {
+    'err': int(np.abs(k_ - want).max()),
+    'drops': st.total_drops, 'rounds': st.rounds,
+    'partial_peel': bool(0 < int((k_ >= 0).sum()) < g.n)}
+k2, _ = dcra_kcore(g, 8, hier, pod_axis='pod')
+res['results']['kcore_pod_err'] = int(np.abs(k2 - want).max())
+d_, st = dcra_bfs(g, 0, hier, pod_axis='pod')
+res['results']['bfs_pod'] = {
+    'err': int(np.abs(d_ - ref.bfs_ref(g, 0)).max()),
+    'drops': st.total_drops}
+
+# ---- compile cache: repeated same-shape launches must not re-trace ----
+program.clear_cache()
+dcra_bfs(g, 0, mesh8)
+s1 = program.cache_stats()
+dcra_bfs(g, 0, mesh8)
+s2 = program.cache_stats()
+dcra_bfs(g, 0, make_mesh((4,), ('data',)))
+s3 = program.cache_stats()
+res['cache'] = {'first': s1, 'repeat': s2, 'other_mesh': s3}
+print('RESULT ' + json.dumps(res))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_parity_covers_every_app_and_device_count(results):
+    seen = {(c["app"], c["n_dev"]) for c in results["parity"]}
+    assert seen == {(a, d) for a in APPS for d in DEVS}
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_analytic_twin_matches_executable(results, app):
+    cases = [c for c in results["parity"] if c["app"] == app]
+    bad = [c for c in cases if not c["ok"]]
+    assert not bad, bad
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_tight_caps_actually_drop(results, app):
+    """cap=2 must overflow for every app, or the agreement is vacuous."""
+    tight = [c for c in results["parity"]
+             if c["app"] == app and c["cap"] == 2]
+    assert any(c["drops"] > 0 for c in tight), tight
+
+
+def test_pod_portal_path_agrees_with_two_stage_mirror(results):
+    assert {c["app"] for c in results["pod"]} == set(APPS)
+    bad = [c for c in results["pod"] if not c["ok"]]
+    assert not bad, bad
+    assert any(c["drops"] > 0 for c in results["pod"])   # tight factor
+    assert any(c["drops"] == 0 for c in results["pod"])  # roomy factor
+
+
+def test_kcore_matches_oracle_with_partial_peel(results):
+    r = results["results"]["kcore"]
+    assert r["err"] == 0 and r["drops"] == 0
+    assert r["partial_peel"] and r["rounds"] > 1
+    assert results["results"]["kcore_pod_err"] == 0
+
+
+def test_iterative_app_runs_hierarchically(results):
+    r = results["results"]["bfs_pod"]
+    assert r["err"] == 0 and r["drops"] == 0
+
+
+def test_repeated_launches_hit_the_compile_cache(results):
+    first = results["cache"]["first"]
+    repeat = results["cache"]["repeat"]
+    other = results["cache"]["other_mesh"]
+    assert repeat["hits"] == first["hits"] + 1
+    assert repeat["misses"] == first["misses"]
+    # no re-trace on the cache hit
+    assert repeat["kernel_traces"] == first["kernel_traces"]
+    # a different deployment is a genuine miss, not a stale reuse
+    assert other["misses"] == repeat["misses"] + 1
