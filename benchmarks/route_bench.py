@@ -1,0 +1,122 @@
+"""Wall-clock benchmark of the routing hot path — the repo's first
+wall-clock perf trajectory artifact.
+
+``python -m benchmarks.route_bench [--quick] [--out BENCH_route.json]``
+times one owner-route-shaped ``bucket()`` round (rank + capacity test +
+slot scatter, payload + one metadata column) per ``route_impl`` over an
+N x S grid, emitting schema ``dcra-route-bench/v1``:
+
+* per-cell, per-impl median ms (jit-compiled, ``block_until_ready``);
+* ``speedup_vs_onehot`` per impl — the machine-portable number the CI
+  gate (:mod:`repro.dse.route_compare`) tracks, since absolute ms do not
+  transfer across runners;
+* ``pallas_lowering`` records what the "pallas" impl actually ran:
+  ``"mosaic"`` on TPU, ``"xla"`` elsewhere (the interpreter-free
+  tile-scan rendering of the same algorithm — the deployed fast path;
+  the Pallas interpreter is never benchmarked).
+
+The committed BENCH_route.json at the repo root is the quick-grid
+baseline the bench-smoke CI job compares against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+QUICK_GRID = [(4096, 8), (4096, 64), (16384, 16), (65536, 8), (65536, 64),
+              (131072, 128)]
+FULL_GRID = QUICK_GRID + [(262144, 64), (262144, 256)]
+IMPLS = ("onehot", "sort", "pallas")
+SCHEMA = "dcra-route-bench/v1"
+
+
+def _bench_cell(n: int, s: int, reps: int) -> Dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.queues import round8
+    from repro.core.routing import bucket
+
+    cap = round8(2 * n // max(s, 1))
+    rng = np.random.default_rng(n + s)
+    dest = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    vals = jnp.asarray(rng.random((n, 1)), jnp.float32)
+    slot_ids = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+
+    fns = {}
+    outs = {}
+    est = []
+    for impl in IMPLS:
+        f = jax.jit(lambda v, d, va, sl, impl=impl: bucket(
+            v, d, va, [sl], s, cap, impl=impl))
+        outs[impl] = f(vals, dest, valid, slot_ids)    # compile
+        jax.block_until_ready(outs[impl])
+        t0 = time.perf_counter()                       # warm + estimate
+        jax.block_until_ready(f(vals, dest, valid, slot_ids))
+        est.append(time.perf_counter() - t0)
+        fns[impl] = f
+    # Sub-ms cells need many samples for a stable median — scale reps so
+    # every impl accumulates >= ~150 ms of measurement (capped), and
+    # interleave the impls per rep so machine-load drift hits all three
+    # equally instead of biasing whichever ran last.
+    reps = max(reps, min(100, int(0.15 / max(min(est), 1e-5)) + 1))
+    times: Dict[str, List[float]] = {impl: [] for impl in IMPLS}
+    for _ in range(reps):
+        for impl in IMPLS:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[impl](vals, dest, valid, slot_ids))
+            times[impl].append(time.perf_counter() - t0)
+    ms = {impl: float(np.median(times[impl]) * 1e3) for impl in IMPLS}
+    # the bench is only meaningful if the impls agree — assert it here
+    ref = outs["onehot"]
+    for impl in ("sort", "pallas"):
+        got = outs[impl]
+        assert jax.numpy.array_equal(ref[0], got[0]), (n, s, impl)
+        assert int(ref[3]) == int(got[3]), (n, s, impl)
+    return {"n": n, "s": s, "cap": cap, "ms": ms,
+            "speedup_vs_onehot": {i: ms["onehot"] / ms[i] for i in IMPLS}}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI grid (the committed baseline's grid)")
+    ap.add_argument("--out", default="BENCH_route.json")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="timing reps per impl (0 = 7 quick / 9 full)")
+    args = ap.parse_args(argv)
+    import jax
+
+    grid = QUICK_GRID if args.quick else FULL_GRID
+    reps = args.reps or (7 if args.quick else 9)
+    cells: List[Dict] = []
+    for n, s in grid:
+        cell = _bench_cell(n, s, reps)
+        cells.append(cell)
+        sp = cell["speedup_vs_onehot"]
+        print(f"route_bench,N={n},S={s},cap={cell['cap']},"
+              f"onehot={cell['ms']['onehot']:.3f}ms,"
+              f"sort={sp['sort']:.2f}x,pallas={sp['pallas']:.2f}x",
+              flush=True)
+    bench = {
+        "schema": SCHEMA,
+        "backend": jax.default_backend(),
+        "pallas_lowering": ("mosaic" if jax.default_backend() == "tpu"
+                            else "xla"),
+        "quick": bool(args.quick),
+        "impls": list(IMPLS),
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

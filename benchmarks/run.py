@@ -21,7 +21,8 @@ def main() -> None:
     scale = 12 if args.quick else args.scale
 
     from . import (fig4_topology, fig5_sram, fig6_pus, fig7_freq, fig8_hbm,
-                   fig10_queues, fig11_scaling, moe_dispatch, roofline_table)
+                   fig10_queues, fig11_scaling, moe_dispatch, roofline_table,
+                   route_bench)
 
     figs = [
         ("fig4_topology", lambda: fig4_topology.main(scale)),
@@ -32,6 +33,10 @@ def main() -> None:
         ("fig10_queues", lambda: fig10_queues.main(scale)),
         ("fig11_scaling", lambda: fig11_scaling.main(scale)),
         ("moe_dispatch", moe_dispatch.main),
+        # wall-clock routing hot path -> BENCH_route.json (the committed
+        # baseline is the --quick grid; see repro.dse.route_compare)
+        ("route_bench", lambda: route_bench.main(
+            ["--quick"] if args.quick else [])),
         # subprocess: needs its own 8-fake-device jax, must not retopologize
         # the sibling benchmarks in this process
         ("noc_routing", lambda: subprocess.run(

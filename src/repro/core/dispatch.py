@@ -32,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .compat import shard_map_unchecked
 from .queues import QueueConfig
 from .routing import (bucket as _bucket, fused_all_to_all, gather_rows,
-                      noc_all_to_all as _a2a,
+                      noc_all_to_all as _a2a, resolve_route_impl,
                       slot_scatter as _slot_scatter)
 
 
@@ -129,6 +129,8 @@ def moe_dcra(params, x, cfg, info: MeshInfo,
     assert mc is not None
     if queues is None:
         queues = dispatch_queues(mc)
+    # the three bounded dispatch buckets share one routing engine
+    impl = resolve_route_impl(queues.route_impl)
     E = mc.num_experts
     group, spans_pods, tp_ffn = info.dispatch_plan(E)
     n_group = info.axis_size(group)
@@ -213,7 +215,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo,
             # ---- single-stage fused a2a (tile-NoC) ---------------------
             _, (eid1, tok1), slot_of_task, _ = _bucket(
                 src_f[:, None] * 0, owner, all_valid,
-                [eids_f % E_local, src_f], n_ex, cap1)
+                [eids_f % E_local, src_f], n_ex, cap1, impl=impl)
             xb1 = gather_rows(xf, tok1)
             xr, (eidr,) = fused_all_to_all(xb1, [eid1], group)
         else:
@@ -222,7 +224,7 @@ def moe_dcra(params, x, cfg, info: MeshInfo,
             p_coord = owner // n_ex
             _, (pc1, eid1, tok1), slot_of_task, _ = _bucket(
                 src_f[:, None] * 0, e_coord, all_valid,
-                [p_coord, eids_f % E_local, src_f], n_ex, cap1)
+                [p_coord, eids_f % E_local, src_f], n_ex, cap1, impl=impl)
             xb1 = gather_rows(xf, tok1)
             xs1, (pcs, eids1) = fused_all_to_all(xb1, [pc1, eid1], group)
             n1 = xs1.shape[0]
@@ -231,7 +233,8 @@ def moe_dcra(params, x, cfg, info: MeshInfo,
             cap2 = queues.channel_cap("portal", n1, n_pod)
             _, (eid2, slot1_of_s2), _, _ = _bucket(
                 pcs[:, None] * 0, jnp.maximum(pcs, 0), valid1,
-                [eids1, jnp.arange(n1, dtype=jnp.int32)], n_pod, cap2)
+                [eids1, jnp.arange(n1, dtype=jnp.int32)], n_pod, cap2,
+                impl=impl)
             xb2 = gather_rows(xs1, slot1_of_s2)
             xr, (eidr,) = fused_all_to_all(xb2, [eid2], info.pod_axis)
 
@@ -247,7 +250,8 @@ def moe_dcra(params, x, cfg, info: MeshInfo,
             cap_e = queues.channel_cap("expert", N_r, E_local)
             _, (srce,), _, _ = _bucket(
                 validr[:, None].astype(jnp.int32) * 0, jnp.maximum(eidr, 0),
-                validr, [jnp.arange(N_r, dtype=jnp.int32)], E_local, cap_e)
+                validr, [jnp.arange(N_r, dtype=jnp.int32)], E_local, cap_e,
+                impl=impl)
             xe = gather_rows(xr, srce)
             ye_b = _expert_ffn(xe.reshape(E_local, cap_e, D).astype(xb.dtype),
                                wg, wu, wd, info.tp_axis, n_tp)

@@ -34,6 +34,14 @@ import jax.numpy as jnp
 # Capacity helpers live with the queue-sizing source of truth; re-exported
 # here because every routing call site thinks in lane-aligned bucket sizes.
 from .queues import round8  # noqa: F401
+# The routing hot path has a kernel tier: `impl="pallas"` ranks/scatters
+# through repro.kernels.route (Mosaic on TPU, the same tiled algorithm in
+# plain XLA off-TPU); "sort" is the argsort fallback below; "onehot" is
+# the legacy O(N*S) rank. Re-exported so call sites resolve the knob once.
+from ..kernels.route import (_on_tpu, bucket_rank,  # noqa: F401
+                             bucket_scatter_pallas, fused_kernels_enabled,
+                             onehot_rank, reduce_received_pallas,
+                             resolve_route_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -76,12 +84,36 @@ def resolve_hier_caps(queues, task: str, e_local: int, n_intra: int,
 # bucketing (the bounded IQ)
 # ---------------------------------------------------------------------------
 
-def positions_by_dest(dest, valid, n_buckets):
-    """Stable position of each *valid* task within its destination bucket."""
-    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)
-    onehot = onehot * valid[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - 1
-    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+def positions_by_dest(dest, valid, n_buckets, impl=None):
+    """Stable position of each *valid* task within its destination bucket
+    (invalid entries are unspecified — callers mask with ``valid``).
+
+    ``impl`` selects the ranking engine (see module doc of
+    :mod:`repro.kernels.route`): ``"pallas"`` streams elements in tiles
+    against per-destination running counts — O(N + S*tiles); ``"sort"``
+    is the argsort-by-dest + segment-offsets fallback; ``"onehot"`` is
+    the legacy O(N*S) one-hot cumsum.
+    """
+    impl = resolve_route_impl(impl)
+    if impl == "pallas":
+        return bucket_rank(dest, valid, n_buckets)
+    if impl == "sort":
+        return _positions_by_dest_sort(dest, valid, n_buckets)
+    return onehot_rank(dest, valid, n_buckets)
+
+
+def _positions_by_dest_sort(dest, valid, n_buckets):
+    """Sort-based rank: stable argsort by destination (invalid pushed to a
+    sentinel bucket), position = index - first index of the run — the same
+    trick :func:`repro.sparse.program._pack_edges` uses host-side."""
+    n = dest.shape[0]
+    key = jnp.where(valid, dest.astype(jnp.int32), n_buckets)
+    order = jnp.argsort(key, stable=True)
+    ks = key[order]
+    start = jnp.searchsorted(ks, ks, side="left")
+    pos_sorted = (jnp.arange(n, dtype=jnp.int32)
+                  - start.astype(jnp.int32))
+    return jnp.zeros(n, jnp.int32).at[order].set(pos_sorted)
 
 
 def slot_scatter(data, slot, valid, num_slots):
@@ -94,13 +126,28 @@ def slot_scatter(data, slot, valid, num_slots):
     return jax.ops.segment_sum(data, seg, num_segments=num_slots + 1)[:num_slots]
 
 
-def bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap):
+def bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap, impl=None):
     """Capacity-bounded bucketing (the IQ). Returns (xb, ints, slot, n_drop).
 
     xb [n_buckets*cap, D]; ints: like aux_ints but slot-ordered (-1 = empty);
     also returns each task's slot (-1 if dropped) for building return maps.
+
+    ``impl`` picks the hot-path engine (see :func:`positions_by_dest`);
+    drop semantics are bit-identical across impls — first ``cap`` tasks
+    per channel in array order — so the analytic twins stay exact no
+    matter which impl a launch resolves.
     """
-    pos = positions_by_dest(dest, valid, n_buckets)
+    impl = resolve_route_impl(impl)
+    if impl == "pallas" and _on_tpu() and fused_kernels_enabled():
+        # fused Mosaic kernel: rank + capacity test + scatter in one pass
+        # (opt-in until TPU-validated — see fused_kernels_enabled)
+        x2 = x_tasks[:, None] if x_tasks.ndim == 1 else x_tasks
+        xb, ints, task_slot, n_drop = bucket_scatter_pallas(
+            x2, dest, valid, aux_ints, n_buckets, cap, interpret=False)
+        if x_tasks.ndim == 1:
+            xb = xb[:, 0]
+        return xb, ints, task_slot, n_drop
+    pos = positions_by_dest(dest, valid, n_buckets, impl=impl)
     keep = valid & (pos < cap)
     slot = dest * cap + jnp.minimum(pos, cap - 1)
     total = n_buckets * cap
@@ -128,17 +175,17 @@ def noc_all_to_all(x, axis):
     return jax.lax.all_to_all(x, axis, 0, 0, tiled=True)
 
 
-def fused_all_to_all(vals: Optional[jax.Array], int_cols: Sequence[jax.Array],
-                     axis) -> Tuple[Optional[jax.Array], List[jax.Array]]:
-    """Deliver value columns + int32 metadata columns in ONE all_to_all.
+def pack_wire(vals: Optional[jax.Array], int_cols: Sequence[jax.Array]
+              ) -> Tuple[jax.Array, tuple]:
+    """Pack value + int32 metadata columns into one f32 wire array.
 
-    ``vals`` [N, D] (or [N], or None) float payload; ``int_cols`` are [N]
-    int32 arrays (slot ids, expert ids, ...). Ints are *bitcast* to f32 —
-    bytes are reinterpreted, never converted — and packed next to the
-    payload columns, so each NoC round issues a single collective. The
-    round-trip is exact. Half-width payloads (bf16/f16) are packed two per
-    f32 wire lane (bitcast, not upcast), so fusing never inflates the
-    collective bytes; other float dtypes ride the wire as f32.
+    Ints are *bitcast* to f32 — bytes reinterpreted, never converted.
+    Half-width payloads (bf16/f16) are packed two per f32 wire lane
+    (bitcast, not upcast), so fusing never inflates the wire bytes: the
+    packed array has exactly ``ceil(D/2) + len(int_cols)`` columns for a
+    half payload, ``D + len(int_cols)`` otherwise. Returns
+    ``(packed, meta)``; feed ``meta`` to :func:`unpack_wire` for the
+    exact round-trip (tested in tests/test_routing.py).
     """
     if vals is None and not int_cols:
         raise ValueError("nothing to route")
@@ -167,14 +214,19 @@ def fused_all_to_all(vals: Optional[jax.Array], int_cols: Sequence[jax.Array],
                                                 jnp.float32)
         cols.append(packed_i[:, None])
     packed = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
-    recv = noc_all_to_all(packed, axis)
-    n_int = len(int_cols)
+    return packed, (dtype, d_vals, half, squeeze, len(int_cols))
+
+
+def unpack_wire(recv: jax.Array, meta: tuple
+                ) -> Tuple[Optional[jax.Array], List[jax.Array]]:
+    """Exact inverse of :func:`pack_wire` (bitcast round-trip)."""
+    dtype, d_vals, half, squeeze, n_int = meta
     ints_out = []
     if n_int:
         tail = recv[:, recv.shape[1] - n_int:]
         ints_out = [jax.lax.bitcast_convert_type(tail[:, i], jnp.int32)
                     for i in range(n_int)]
-    if vals is None:
+    if dtype is None:
         return None, ints_out
     v_wire = recv[:, :recv.shape[1] - n_int]
     if half:
@@ -187,11 +239,27 @@ def fused_all_to_all(vals: Optional[jax.Array], int_cols: Sequence[jax.Array],
     return v_out, ints_out
 
 
+def fused_all_to_all(vals: Optional[jax.Array], int_cols: Sequence[jax.Array],
+                     axis) -> Tuple[Optional[jax.Array], List[jax.Array]]:
+    """Deliver value columns + int32 metadata columns in ONE all_to_all.
+
+    ``vals`` [N, D] (or [N], or None) float payload; ``int_cols`` are [N]
+    int32 arrays (slot ids, expert ids, ...). The columns are packed into
+    a single f32 wire array (:func:`pack_wire` — ints bitcast, half-width
+    payloads two per lane, never inflating the collective bytes), so each
+    NoC round issues a single collective; the round-trip is exact.
+    """
+    packed, meta = pack_wire(vals, int_cols)
+    recv = noc_all_to_all(packed, axis)
+    return unpack_wire(recv, meta)
+
+
 # ---------------------------------------------------------------------------
 # owner-routed rounds (bucket + fused a2a), flat and hierarchical
 # ---------------------------------------------------------------------------
 
-def owner_route(vals, slot_ids, owner, valid, n_shards, cap, axis):
+def owner_route(vals, slot_ids, owner, valid, n_shards, cap, axis,
+                impl=None):
     """One flat NoC round: route ``(slot_ids, vals)`` tasks to ``owner``.
 
     Per-shard (call inside shard_map). vals [N] f32 payload, slot_ids [N]
@@ -201,13 +269,13 @@ def owner_route(vals, slot_ids, owner, valid, n_shards, cap, axis):
     IQ-overflow drops (psum over ``axis`` for the global count).
     """
     xb, (slot_b,), _, n_drop = bucket(vals[:, None], owner, valid,
-                                      [slot_ids], n_shards, cap)
+                                      [slot_ids], n_shards, cap, impl=impl)
     recv_vals, (recv_slot,) = fused_all_to_all(xb, [slot_b], axis)
     return recv_slot, recv_vals[:, 0], n_drop
 
 
 def owner_route_hier(vals, slot_ids, owner, valid, n_intra, intra_axis,
-                     n_pods, pod_axis, cap1, cap2):
+                     n_pods, pod_axis, cap1, cap2, impl=None):
     """Two-stage pod/portal NoC round (paper §III-A two-level torus).
 
     Stage 1 (tile-NoC): tasks go to the device in the *sender's* pod with
@@ -219,16 +287,17 @@ def owner_route_hier(vals, slot_ids, owner, valid, n_intra, intra_axis,
     e_coord = owner % n_intra
     p_coord = owner // n_intra
     xb, (pc_b, slot_b), _, drop1 = bucket(vals[:, None], e_coord, valid,
-                                          [p_coord, slot_ids], n_intra, cap1)
+                                          [p_coord, slot_ids], n_intra, cap1,
+                                          impl=impl)
     v1, (pc1, slot1) = fused_all_to_all(xb, [pc_b, slot_b], intra_axis)
     valid1 = pc1 >= 0
     xb2, (slot2_b,), _, drop2 = bucket(v1, jnp.maximum(pc1, 0), valid1,
-                                       [slot1], n_pods, cap2)
+                                       [slot1], n_pods, cap2, impl=impl)
     v2, (recv_slot,) = fused_all_to_all(xb2, [slot2_b], pod_axis)
     return recv_slot, v2[:, 0], drop1 + drop2
 
 
-def reduce_received(recv_slot, recv_val, n_local, op):
+def reduce_received(recv_slot, recv_val, n_local, op, impl=None):
     """Apply received tasks at the owner: segment add/min/store into local
     slots.
 
@@ -237,8 +306,15 @@ def reduce_received(recv_slot, recv_val, n_local, op):
     independent of bucket/slot arrival order, and by construction the same
     winner the analytic ``TaskEngine._reduce(op='store')`` picks for the
     same task stream (differential-tested in tests/test_core_engine.py).
-    Slots that received no task read as 0.
+    Slots that received no task read as 0. ``impl="pallas"`` on TPU runs
+    the fused receive-reduce kernel (opt-in until TPU-validated — see
+    :func:`repro.kernels.route.fused_kernels_enabled`); elsewhere the
+    segment ops below are already the fastest XLA rendering.
     """
+    if (resolve_route_impl(impl) == "pallas" and _on_tpu()
+            and fused_kernels_enabled()):
+        return reduce_received_pallas(recv_slot, recv_val, n_local, op,
+                                      interpret=False)
     valid = recv_slot >= 0
     seg = jnp.where(valid, recv_slot, n_local)
     if op == "add":

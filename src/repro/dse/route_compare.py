@@ -1,0 +1,104 @@
+"""``python -m repro.dse.route_compare OLD.json NEW.json`` — routing
+hot-path trajectory gate (sibling of :mod:`repro.dse.compare`, for the
+wall-clock ``dcra-route-bench/v1`` artifact ``BENCH_route.json``).
+
+Absolute milliseconds do not transfer across machines (the committed
+baseline is produced on a dev box, CI runs on shared runners), so the
+gate compares what IS machine-portable: each impl's **speedup vs the
+onehot baseline measured in the same run**. A cell+impl whose relative
+speedup falls more than ``--tol`` (default 20%) below the committed
+baseline fails the build — the fast path got slower relative to the
+legacy path, which is a code regression, not runner noise.
+
+Cells are matched by (n, s); a cell or impl present in the baseline but
+missing from the new bench is a failure (silent coverage loss); new
+cells are informational.
+
+Exit codes: 0 ok; 1 bad input; 2 regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SCHEMA = "dcra-route-bench/v1"
+
+
+def _cells(bench: Dict) -> Dict[Tuple[int, int], Dict]:
+    return {(c["n"], c["s"]): c for c in bench.get("cells", [])}
+
+
+def compare(old: Dict, new: Dict, tol: float = 0.2
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes); empty failures == trajectory ok."""
+    failures: List[str] = []
+    notes: List[str] = []
+    co, cn = _cells(old), _cells(new)
+    if not co:
+        return ["old bench has no cells"], notes
+    if not cn:
+        return ["new bench has no cells"], notes
+    # speedups only compare within one lowering: a baseline regenerated
+    # on TPU (mosaic) is meaningless against a CPU (xla) re-measure
+    for field in ("backend", "pallas_lowering"):
+        if old.get(field) != new.get(field):
+            return [f"{field} mismatch: baseline {old.get(field)!r} vs "
+                    f"new {new.get(field)!r} — regenerate the committed "
+                    f"baseline on the comparison backend"], notes
+    for key in sorted(co):
+        if key not in cn:
+            failures.append(f"cell N={key[0]} S={key[1]}: missing from "
+                            f"new bench")
+            continue
+        so = co[key].get("speedup_vs_onehot", {})
+        sn = cn[key].get("speedup_vs_onehot", {})
+        for impl in sorted(so):
+            if impl not in sn:
+                failures.append(f"cell N={key[0]} S={key[1]} {impl}: "
+                                f"missing from new bench")
+                continue
+            line = (f"N={key[0]} S={key[1]} {impl}: "
+                    f"{so[impl]:.2f}x -> {sn[impl]:.2f}x vs onehot")
+            if sn[impl] < so[impl] * (1.0 - tol):
+                failures.append(f"{line}  REGRESSED beyond tol={tol:.0%}")
+            else:
+                notes.append(line)
+    born = sorted(set(cn) - set(co))
+    if born:
+        notes.append(f"{len(born)} new cell(s): {born} (informational)")
+    return failures, notes
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("old", help="committed baseline BENCH_route.json")
+    ap.add_argument("new", help="freshly-benched BENCH_route.json")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="relative speedup regression tolerance "
+                         "(default 20%%)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[dse.route_compare] bad input: {e}", file=sys.stderr)
+        return 1
+    for name, bench in (("old", old), ("new", new)):
+        if bench.get("schema") != SCHEMA:
+            print(f"[dse.route_compare] bad input: {name} schema "
+                  f"{bench.get('schema')!r} != {SCHEMA!r}", file=sys.stderr)
+            return 1
+    failures, notes = compare(old, new, tol=args.tol)
+    for line in notes:
+        print(f"[dse.route_compare] {line}")
+    for line in failures:
+        print(f"[dse.route_compare] FAIL: {line}", file=sys.stderr)
+    return 2 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

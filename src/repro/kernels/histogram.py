@@ -37,18 +37,29 @@ def _hist_kernel(elems_ref, out_ref, *, bin_tile):
 
 def histogram_pallas(elements: jax.Array, n_bins: int,
                      interpret: bool = True) -> jax.Array:
-    """elements: [N] int32 in [0, n_bins). Returns [n_bins] int32 counts."""
+    """elements: [N] int32 in [0, n_bins). Returns [n_bins] int32 counts.
+
+    Any N / n_bins works: the element tail is padded with a -1 sentinel
+    (matches no bin — negative ids are therefore also safe no-ops in the
+    input itself, e.g. the task streams' padding entries) and the bin
+    axis is padded to the bin tile and sliced off the result.
+    """
     n = elements.shape[0]
-    et = min(ELEM_TILE, n)
+    if n == 0:                       # zero-size grid is a pallas error
+        return jnp.zeros((n_bins,), jnp.int32)
+    et = min(ELEM_TILE, max(1, n))
     bt = min(BIN_TILE, n_bins)
-    assert n % et == 0 and n_bins % bt == 0
-    grid = (n // et, n_bins // bt)
+    n_pad = -(-n // et) * et
+    nb_pad = -(-n_bins // bt) * bt
+    elems = jnp.pad(elements.astype(jnp.int32), (0, n_pad - n),
+                    constant_values=-1)
+    grid = (n_pad // et, nb_pad // bt)
     out = pl.pallas_call(
         functools.partial(_hist_kernel, bin_tile=bt),
         grid=grid,
         in_specs=[pl.BlockSpec((et,), lambda i, j: (i,))],
         out_specs=pl.BlockSpec((bt,), lambda i, j: (j,)),
-        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((nb_pad,), jnp.int32),
         interpret=interpret,
-    )(elements.astype(jnp.int32))
-    return out
+    )(elems)
+    return out[:n_bins]

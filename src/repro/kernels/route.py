@@ -1,0 +1,332 @@
+"""Pallas routing fast path — the NoC hot loop as kernels.
+
+Every DCRA round funnels through :func:`repro.core.routing.bucket`: rank
+each task within its destination bucket, admit the first ``cap`` per
+channel, scatter the kept tasks into slot order, and (at the owner)
+reduce the received stream into local state. The legacy ranking is a
+``one_hot(dest, S)`` + cumsum — O(N*S) memory and FLOPs materialized in
+HBM per stage, per round. This module provides the kernel tier of that
+loop (the paper's IQ admission is *the* throughput limiter, §III/§VI):
+
+* :func:`bucket_rank` — per-destination running counts live in VMEM and
+  elements stream through in tiles: O(N + S*tiles) traffic instead of
+  O(N*S). On TPU this is the Mosaic kernel
+  (:func:`bucket_rank_pallas`); off-TPU it lowers to the *same tiled
+  algorithm* rendered in plain XLA (:func:`bucket_rank_xla` — within-tile
+  ranks via an L*L compare, running counts via one scatter-add), never
+  the Pallas interpreter, so the deployed fast path is interpreter-free
+  on every backend. Tiny bucket counts keep the one-hot rank (it wins
+  below :data:`ONEHOT_MAX_BUCKETS` — see the README routing section).
+* :func:`bucket_scatter_pallas` — the fused admission kernel: one pass
+  over the task stream producing ``(xb, ints, task_slot, n_drop)``
+  (rank, capacity test, and slot scatter fused; the XLA paths need a
+  rank pass plus a ``segment_sum`` scatter).
+* :func:`reduce_received_pallas` — fused receive-side add/min/store into
+  local slots.
+
+Drop semantics are bit-identical to the one-hot path (first ``cap`` per
+channel, array order), differential-tested in tests/test_route_kernels.py
+— which is what keeps the analytic twins (``program_app_stats``,
+``dse.shardcheck``) exact no matter which impl a launch resolves.
+
+``impl`` knob (threaded from ``QueueConfig.route_impl`` / ``run_program``
+/ ``dcra_scatter``): ``"pallas"`` (the fast path above), ``"sort"``
+(argsort-by-dest + segment offsets — the same trick ``_pack_edges`` uses
+host-side; pure XLA, selectable everywhere), ``"onehot"`` (legacy).
+``None``/``"auto"`` resolve to the fast path, which autodetects the
+backend exactly like :mod:`repro.kernels.ops` wrappers do (Mosaic on
+TPU, native XLA elsewhere; ``interpret=True`` is for tests only).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ELEM_TILE = 256          # pallas kernels: elements streamed per grid step
+SCAN_TILE = 32           # XLA tile-scan: within-tile rank compare width
+ONEHOT_MAX_BUCKETS = 32  # below this S the one-hot rank wins off-TPU
+
+ROUTE_IMPLS = ("pallas", "sort", "onehot")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_kernels_enabled() -> bool:
+    """Opt-in gate for the *per-element* Mosaic kernels
+    (:func:`bucket_scatter_pallas`, :func:`reduce_received_pallas`) on
+    real TPU. Their dynamic single-row stores inside ``fori_loop`` are
+    interpret-tested only (this container has no TPU), and Mosaic
+    restricts dynamic scalar-indexed stores — so until a TPU run
+    validates them (ROADMAP follow-up), the deployed TPU path keeps the
+    vectorized rank kernel + segment-op scatter and these engage only
+    under ``DCRA_ROUTE_FUSED=1``."""
+    return os.environ.get("DCRA_ROUTE_FUSED") == "1"
+
+
+def onehot_rank(dest, valid, n_buckets):
+    """THE legacy one-hot-cumsum rank — the single copy both
+    ``positions_by_dest(impl="onehot")`` and :func:`bucket_rank`'s
+    narrow-bucket branch call, so the documented byte-for-byte
+    equivalence between them cannot silently drift."""
+    onehot = jax.nn.one_hot(dest, n_buckets, dtype=jnp.int32)
+    onehot = onehot * valid[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    return jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+
+
+def resolve_route_impl(impl=None) -> str:
+    """``None``/``"auto"`` -> the fast path (``"pallas"``), which itself
+    autodetects the backend (Mosaic on TPU, native XLA off-TPU)."""
+    if impl in (None, "auto"):
+        return "pallas"
+    if impl not in ROUTE_IMPLS:
+        raise ValueError(f"route_impl {impl!r} not in {ROUTE_IMPLS}")
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# bucket-rank: stable cumcount of each element within its destination
+# ---------------------------------------------------------------------------
+
+def _rank_kernel(dest_ref, valid_ref, pos_ref, counts_ref, *, n_buckets):
+    """One element tile: pos = running count + within-tile exclusive
+    cumcount; per-destination running counts persist in VMEM scratch."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    dest = dest_ref[...]                                     # [ET]
+    valid = valid_ref[...] != 0
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, n_buckets), 1)
+    onehot = ((dest[:, None] == bins) &
+              valid[:, None]).astype(jnp.int32)              # [ET, S]
+    excl = jnp.cumsum(onehot, axis=0) - onehot               # within-tile
+    run = counts_ref[0, :][None, :]                          # [1, S]
+    # select this element's column without a dynamic gather: the one-hot
+    # row has a single 1 at the destination
+    pos_ref[...] = jnp.sum((excl + run) * onehot, axis=1)
+    counts_ref[0, :] += jnp.sum(onehot, axis=0)
+
+
+def bucket_rank_pallas(dest: jax.Array, valid: jax.Array, n_buckets: int,
+                       interpret: bool = True) -> jax.Array:
+    """Stable position of each *valid* element within its destination
+    bucket (invalid positions are 0 — callers mask with ``valid``).
+
+    dest [N] int32 in [0, n_buckets); valid [N] bool. Tail-padded to the
+    element tile, so any N works.
+    """
+    n = dest.shape[0]
+    if n == 0:                       # zero-size grid is a pallas error
+        return jnp.zeros((0,), jnp.int32)
+    et = min(ELEM_TILE, max(8, n))
+    n_pad = -(-n // et) * et
+    pad = n_pad - n
+    dest_p = jnp.pad(dest.astype(jnp.int32), (0, pad))
+    valid_p = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    pos = pl.pallas_call(
+        functools.partial(_rank_kernel, n_buckets=n_buckets),
+        grid=(n_pad // et,),
+        in_specs=[pl.BlockSpec((et,), lambda i: (i,)),
+                  pl.BlockSpec((et,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((et,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, n_buckets), jnp.int32)],
+        interpret=interpret,
+    )(dest_p, valid_p)
+    return pos[:n]
+
+
+def bucket_rank_xla(dest: jax.Array, valid: jax.Array, n_buckets: int,
+                    tile: int = SCAN_TILE) -> jax.Array:
+    """The tiled-scan rank in plain XLA — the interpreter-free off-TPU
+    lowering of :func:`bucket_rank_pallas` (same algorithm: within-tile
+    ranks + per-destination running counts across tiles).
+
+    O(N*tile + tiles*S) instead of the one-hot's O(N*S): the within-tile
+    rank is an L*L equality compare and the cross-tile running counts are
+    one scatter-add + one short cumsum — nothing N*S ever materializes.
+    """
+    n = dest.shape[0]
+    c = -(-n // tile)
+    pad = c * tile - n
+    # sentinel bucket S for invalid/padding: equal only to other invalid
+    key = jnp.where(valid, dest.astype(jnp.int32), n_buckets)
+    key = jnp.pad(key, (0, pad), constant_values=n_buckets)
+    keyc = key.reshape(c, tile)
+    eq = keyc[:, :, None] == keyc[:, None, :]                # [C, L, L]
+    lower = jnp.tril(jnp.ones((tile, tile), bool), -1)
+    within = jnp.sum((eq & lower).astype(jnp.int32), -1)     # [C, L]
+    seg = (jnp.repeat(jnp.arange(c, dtype=jnp.int32), tile)
+           * (n_buckets + 1) + key)
+    cnt = jax.ops.segment_sum(jnp.ones(c * tile, jnp.int32), seg,
+                              num_segments=c * (n_buckets + 1)
+                              ).reshape(c, n_buckets + 1)
+    run = (jnp.cumsum(cnt, axis=0) - cnt).reshape(-1)        # excl per tile
+    return (within.reshape(-1) + run[seg])[:n]
+
+
+def bucket_rank(dest: jax.Array, valid: jax.Array, n_buckets: int
+                ) -> jax.Array:
+    """The deployed fast-path rank: Mosaic on TPU, XLA tile-scan off-TPU
+    (one-hot for tiny bucket counts, where it wins — see module doc)."""
+    if _on_tpu():
+        return bucket_rank_pallas(dest, valid, n_buckets, interpret=False)
+    if n_buckets < ONEHOT_MAX_BUCKETS:
+        # narrow bucket counts: the one-hot cumsum is cheap and beats the
+        # scan's fixed costs — the shared legacy formulation, so these
+        # shapes are byte-for-byte the baseline path
+        return onehot_rank(dest, valid, n_buckets)
+    return bucket_rank_xla(dest, valid, n_buckets)
+
+
+# ---------------------------------------------------------------------------
+# fused bucket-scatter: rank + capacity test + slot scatter in one pass
+# ---------------------------------------------------------------------------
+
+def _scatter_kernel(dest_ref, valid_ref, x_ref, aux_ref, xb_ref, ints_ref,
+                    slot_ref, counts_ref, *, n_buckets, cap, elem_tile):
+    i = pl.program_id(0)
+    total = n_buckets * cap
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        xb_ref[...] = jnp.zeros_like(xb_ref)
+        ints_ref[...] = jnp.full_like(ints_ref, -1)
+
+    def body(e, _):
+        d = jnp.clip(dest_ref[e], 0, n_buckets - 1)
+        v = valid_ref[e] != 0
+        c = counts_ref[0, d]
+        keep = v & (c < cap)
+        # kept tasks land in their slot; dropped/invalid ones hit the
+        # garbage row `total`, sliced off by the wrapper
+        w = jnp.where(keep, d * cap + jnp.minimum(c, cap - 1), total)
+        xb_ref[w, :] = x_ref[e, :]
+        ints_ref[w, :] = aux_ref[e, :]
+        slot_ref[e] = jnp.where(keep, w, -1)
+        counts_ref[0, d] = c + v.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, elem_tile, body, 0)
+
+
+def bucket_scatter_pallas(x, dest, valid, aux_ints, n_buckets, cap,
+                          interpret: bool = True):
+    """Fused capacity-bounded bucketing: ONE pass over the task stream.
+
+    Same contract as :func:`repro.core.routing.bucket` — returns
+    ``(xb [n_buckets*cap, D], ints (list of [n_buckets*cap] int32, -1 =
+    empty), task_slot [N] (-1 = dropped), n_drop)`` with the identical
+    first-``cap``-per-channel admission in array order.
+    """
+    n, d_cols = x.shape
+    total = n_buckets * cap
+    if n == 0:                       # zero-size grid is a pallas error
+        return (jnp.zeros((total, d_cols), x.dtype),
+                [jnp.full((total,), -1, jnp.int32) for _ in aux_ints],
+                jnp.zeros((0,), jnp.int32), jnp.int32(0))
+    k = max(1, len(aux_ints))
+    aux = (jnp.stack([a.astype(jnp.int32) for a in aux_ints], axis=1)
+           if aux_ints else jnp.zeros((n, 1), jnp.int32))
+    et = min(ELEM_TILE, max(8, n))
+    n_pad = -(-n // et) * et
+    pad = n_pad - n
+    dest_p = jnp.pad(dest.astype(jnp.int32), (0, pad))
+    valid_p = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    x_p = jnp.pad(x, ((0, pad), (0, 0)))
+    aux_p = jnp.pad(aux, ((0, pad), (0, 0)))
+    xb, ints, slot = pl.pallas_call(
+        functools.partial(_scatter_kernel, n_buckets=n_buckets, cap=cap,
+                          elem_tile=et),
+        grid=(n_pad // et,),
+        in_specs=[pl.BlockSpec((et,), lambda i: (i,)),
+                  pl.BlockSpec((et,), lambda i: (i,)),
+                  pl.BlockSpec((et, d_cols), lambda i: (i, 0)),
+                  pl.BlockSpec((et, k), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((total + 1, d_cols), lambda i: (0, 0)),
+                   pl.BlockSpec((total + 1, k), lambda i: (0, 0)),
+                   pl.BlockSpec((et,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((total + 1, d_cols), x.dtype),
+                   jax.ShapeDtypeStruct((total + 1, k), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, n_buckets), jnp.int32)],
+        interpret=interpret,
+    )(dest_p, valid_p, x_p, aux_p)
+    task_slot = slot[:n]
+    n_drop = jnp.sum(valid) - jnp.sum(task_slot >= 0)
+    ints_out = [ints[:total, j] for j in range(len(aux_ints))]
+    return xb[:total], ints_out, task_slot, n_drop
+
+
+# ---------------------------------------------------------------------------
+# fused receive-reduce: apply the received stream at the owner
+# ---------------------------------------------------------------------------
+
+_REDUCE_INIT = {"add": 0.0, "min": float("inf"), "store": float("-inf")}
+
+
+def _reduce_kernel(slot_ref, val_ref, y_ref, *, n_local, op, elem_tile):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.full_like(y_ref, _REDUCE_INIT[op])
+
+    def body(e, _):
+        s = slot_ref[e]
+        w = jnp.clip(jnp.where(s >= 0, s, n_local), 0, n_local)
+        v = val_ref[e]
+        if op == "add":
+            y_ref[w] += jnp.where(s >= 0, v, 0.0)
+        elif op == "min":
+            y_ref[w] = jnp.minimum(y_ref[w], jnp.where(s >= 0, v, jnp.inf))
+        else:                                                # "store" (max)
+            y_ref[w] = jnp.maximum(y_ref[w], jnp.where(s >= 0, v, -jnp.inf))
+        return 0
+
+    jax.lax.fori_loop(0, elem_tile, body, 0)
+
+
+def reduce_received_pallas(recv_slot, recv_val, n_local, op,
+                           interpret: bool = True):
+    """Fused owner-side reduce — same contract as
+    :func:`repro.core.routing.reduce_received` (add/min/store; ``store``
+    keeps the deterministic max-value tie-break)."""
+    if op not in _REDUCE_INIT:
+        raise ValueError(op)
+    n = recv_slot.shape[0]
+    if n == 0:                       # zero-size grid is a pallas error
+        return jnp.full((n_local,), jnp.inf if op == "min" else 0.0,
+                        jnp.float32)
+    et = min(ELEM_TILE, max(8, n))
+    n_pad = -(-n // et) * et
+    pad = n_pad - n
+    slot_p = jnp.pad(recv_slot.astype(jnp.int32), (0, pad),
+                     constant_values=-1)
+    val_p = jnp.pad(recv_val.astype(jnp.float32), (0, pad))
+    y = pl.pallas_call(
+        functools.partial(_reduce_kernel, n_local=n_local, op=op,
+                          elem_tile=et),
+        grid=(n_pad // et,),
+        in_specs=[pl.BlockSpec((et,), lambda i: (i,)),
+                  pl.BlockSpec((et,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_local + 1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_local + 1,), jnp.float32),
+        interpret=interpret,
+    )(slot_p, val_p)[:n_local]
+    if op == "min":
+        return jnp.where(jnp.isfinite(y), y, jnp.inf)
+    if op == "store":
+        return jnp.where(jnp.isfinite(y), y, 0.0)
+    return y

@@ -116,6 +116,25 @@ def _histogram_stream(data, params, n_dev, seed):
     return dest, vals, n_bins
 
 
+def _histogram_local_reduce(data, dest, vals, n_items):
+    """Single-shard kernel-tier reduce: the MXU histogram kernel counts
+    the task stream directly (dest IS the bin id; -1 padding matches no
+    bin), replacing the owner-routed ``reduce_received`` round.
+
+    Only consulted by ``run_program`` when no task can drop, so the
+    counts are bit-identical to the routed path (differential-tested in
+    tests/test_route_kernels.py). Returns None — falling back to the
+    routed path — off-TPU at sizes where the interpret-mode kernel would
+    be slower than the XLA scatter.
+    """
+    from ..kernels import ops
+    if jax.default_backend() != "tpu" and len(dest) > 4096:
+        return None
+    counts = ops.histogram(jax.numpy.asarray(dest, jax.numpy.int32),
+                           n_items)
+    return counts.astype(jax.numpy.float32)
+
+
 # ---------------------------------------------------------------------------
 # program rule library (xp-generic: jnp in-kernel, numpy in the twin)
 # ---------------------------------------------------------------------------
@@ -201,7 +220,8 @@ SPMV = TaskProgram(name="spmv", reduce_op="add", mode="single",
 
 HISTOGRAM = TaskProgram(name="histogram", reduce_op="add", mode="single",
                         default_capacity_factor=2.0,
-                        stream=_histogram_stream)
+                        stream=_histogram_stream,
+                        local_reduce=_histogram_local_reduce)
 
 
 # ---- k-core decomposition: the seventh app, a pure program definition ----
@@ -244,7 +264,7 @@ PROGRAMS = {p.name: p for p in (BFS, SSSP, WCC, PAGERANK, SPMV, HISTOGRAM,
 def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
               capacity_factor: Optional[float] = None, seed: int = 0,
               pod_axis=None, cap: Optional[int] = None, config=None,
-              objective="teps"):
+              objective="teps", route_impl: Optional[str] = None):
     """Distributed y = A @ x via one owner-routed round.
 
     ``config="auto"`` resolves pod/portal routing and the per-task IQ
@@ -255,18 +275,20 @@ def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
     y, stats = run_program(SPMV, (g, x), mesh, dataset=g, axis=axis,
                            pod_axis=pod_axis, cap=cap,
                            capacity_factor=capacity_factor, config=config,
-                           objective=objective, seed=seed)
+                           objective=objective, seed=seed,
+                           route_impl=route_impl)
     return y, stats.total_drops
 
 
 def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
                    capacity_factor: Optional[float] = None, pod_axis=None,
                    cap: Optional[int] = None, config=None,
-                   objective="teps"):
+                   objective="teps", route_impl: Optional[str] = None):
     y, stats = run_program(HISTOGRAM, (elements, n_bins), mesh,
                            dataset=elements, axis=axis, pod_axis=pod_axis,
                            cap=cap, capacity_factor=capacity_factor,
-                           config=config, objective=objective)
+                           config=config, objective=objective,
+                           route_impl=route_impl)
     return y, stats.total_drops
 
 

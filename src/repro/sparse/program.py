@@ -45,7 +45,8 @@ from jax.sharding import PartitionSpec as P
 from ..core.compat import shard_map_unchecked
 from ..core.queues import QueueConfig
 from ..core.routing import (owner_route, owner_route_hier, reduce_received,
-                            resolve_flat_cap, resolve_hier_caps)
+                            resolve_flat_cap, resolve_hier_caps,
+                            resolve_route_impl)
 from ..core.task_engine import (EngineConfig, RoundStats, RunStats,
                                 TaskEngine)
 from ..core.topology import TileGrid
@@ -146,6 +147,11 @@ class TaskProgram:
     # stream rule ----------------------------------------------------------
     stream: Optional[Callable] = None      # (data, params, n_dev, seed)
     #                                      #   -> (dest, vals, n_items)
+    # optional kernel-tier local reduce for single-shard stream launches:
+    # (data, dest, vals, n_items) -> y or None (None = use the routed
+    # path). Only consulted when no task can drop (cap >= e_local), so
+    # the result — and the analytic twin — stay bit-identical.
+    local_reduce: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -331,7 +337,8 @@ def _cached(key, build):
 def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
                  capacity_factor: float = 1.5, pod_axis=None,
                  cap: Optional[int] = None,
-                 queues: Optional[QueueConfig] = None, task: str = "T3"):
+                 queues: Optional[QueueConfig] = None, task: str = "T3",
+                 route_impl: Optional[str] = None):
     """Owner-routed scatter-reduce: one NoC round.
 
     dest/vals: [E] sharded over the device axes (edge-parallel tasks);
@@ -351,7 +358,12 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     revalidation sweeps the IQ axis in queue entries, so rounding would
     validate a different capacity than the analytic model swept);
     factor-derived capacities keep the lane-aligned round8. Compiled
-    kernels are cached by (shapes, mesh, capacities, op).
+    kernels are cached by (shapes, mesh, capacities, op, route impl).
+
+    ``route_impl`` picks the routing hot-path engine ("pallas" | "sort" |
+    "onehot"; None = ``queues.route_impl`` or the backend-autodetected
+    fast path — see :mod:`repro.kernels.route`); drop semantics are
+    identical across impls, so the analytic twin needs no matching knob.
     """
     n_dev = mesh.devices.size
     e_local = dest.shape[0] // n_dev
@@ -370,15 +382,18 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
         sizes = _axis_sizes(mesh)
         pods = (sizes[axis], sizes[pod_axis])
         caps = resolve_hier_caps(queues, task, e_local, *pods)
+    impl = resolve_route_impl(route_impl if route_impl is not None
+                              else queues.route_impl)
 
-    key = ("scatter", op, n_local, n_dev, axis, pod_axis, pods, caps,
+    key = ("scatter", op, n_local, n_dev, axis, pod_axis, pods, caps, impl,
            _mesh_key(mesh), int(dest.shape[0]))
     fn = _cached(key, lambda: _build_scatter_fn(
-        mesh, axis, pod_axis, pods, n_dev, n_local, caps, op))
+        mesh, axis, pod_axis, pods, n_dev, n_local, caps, op, impl))
     return fn(dest, vals)
 
 
-def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op):
+def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op,
+                      impl):
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
 
     if pod_axis is None:
@@ -390,8 +405,8 @@ def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op):
             dest_c = jnp.maximum(dest_b, 0)
             recv_slot, recv_val, n_drop = owner_route(
                 vals_b, dest_c // n_dev, dest_c % n_dev, valid,
-                n_dev, cap, axis)
-            y = reduce_received(recv_slot, recv_val, n_local, op)
+                n_dev, cap, axis, impl=impl)
+            y = reduce_received(recv_slot, recv_val, n_local, op, impl=impl)
             return y, jax.lax.psum(n_drop, axis)
     else:
         n_intra, n_pods = pods
@@ -403,8 +418,8 @@ def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op):
             dest_c = jnp.maximum(dest_b, 0)
             recv_slot, recv_val, n_drop = owner_route_hier(
                 vals_b, dest_c // n_dev, dest_c % n_dev, valid,
-                n_intra, axis, n_pods, pod_axis, cap1, cap2)
-            y = reduce_received(recv_slot, recv_val, n_local, op)
+                n_intra, axis, n_pods, pod_axis, cap1, cap2, impl=impl)
+            y = reduce_received(recv_slot, recv_val, n_local, op, impl=impl)
             return y, jax.lax.psum(n_drop, (pod_axis, axis))
 
     return jax.jit(shard_map_unchecked(kernel, mesh=mesh,
@@ -423,13 +438,16 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
                 config=None, objective="teps",
                 params: Optional[Mapping] = None,
                 max_rounds: Optional[int] = None, seed: int = 0,
-                dataset=None):
+                dataset=None, route_impl: Optional[str] = None):
     """Execute a :class:`TaskProgram` on ``mesh``.
 
     Graph programs return ``(state_arrays, AppStats)`` — each state array
     unpacked to global order as float64; stream programs return
     ``(y_global, AppStats)`` with a single round. ``dataset`` overrides
     what ``config="auto"`` signatures (defaults to ``data``).
+    ``route_impl`` picks the routing hot-path engine ("pallas" | "sort" |
+    "onehot"; None = ``queues.route_impl`` or backend autodetect) — part
+    of the compile-cache key, never of the drop semantics.
     """
     params = dict(params or {})
     kwargs_set = [k for k, v in (("capacity_factor", capacity_factor),
@@ -447,10 +465,26 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
                                       pod=pod_axis is not None)
         if queues is None:
             queues = _resolve_queues(prog, None, cap, capacity_factor)
+        # an explicit route_impl request always runs the routed path —
+        # the local-reduce shortcut only replaces the *default* engine
+        if (prog.local_reduce is not None and n_dev == 1
+                and pod_axis is None and route_impl is None
+                and queues.route_impl is None):
+            e_local = len(dest)
+            rcap = resolve_flat_cap(queues, prog.task, e_local, n_dev)
+            if rcap >= e_local:    # no task can drop -> bit-identical
+                y = prog.local_reduce(data, dest, vals, n_items)
+                if y is not None:
+                    stats = AppStats(
+                        rounds=1,
+                        messages=np.array([int((dest >= 0).sum())],
+                                          np.int64),
+                        drops=np.array([0], np.int64))
+                    return y, stats
         y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals),
                                      n_items, mesh, axis, op=prog.reduce_op,
                                      pod_axis=pod_axis, queues=queues,
-                                     task=prog.task)
+                                     task=prog.task, route_impl=route_impl)
         stats = AppStats(rounds=1,
                          messages=np.array([int((dest >= 0).sum())],
                                            np.int64),
@@ -474,6 +508,8 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
         sizes = _axis_sizes(mesh)
         pods = (sizes[axis], sizes[pod_axis])
     caps = _graph_caps(queues, prog.task, E_max, n_dev, pods)
+    impl = resolve_route_impl(route_impl if route_impl is not None
+                              else queues.route_impl)
 
     states0, fills = prog.init(g, params)
     packed = tuple(np.asarray(_owner_pack_np(s, n_dev, f)[0], np.float32)
@@ -485,11 +521,11 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
                      else prog.max_rounds)
 
     key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
-           rounds, len(packed), tuple(sorted(params.items())),
+           impl, rounds, len(packed), tuple(sorted(params.items())),
            _mesh_key(mesh))
     fn = _cached(key, lambda: _build_graph_fn(
         prog, mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
-        params, rounds, len(packed)))
+        params, rounds, len(packed), impl))
     out = fn(src_slot, dst, w, *packed)
     states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
     stats = _collect_stats(r, msgs, drops)
@@ -499,7 +535,7 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
 
 
 def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
-                    caps, params, rounds, n_states):
+                    caps, params, rounds, n_states, impl=None):
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
     axes = (pod_axis, axis) if pod_axis else axis
 
@@ -522,13 +558,14 @@ def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
             m = gsum(jnp.sum(active.astype(jnp.int32)))
             if pod_axis is None:
                 recv_slot, recv_val, nd = owner_route(
-                    vals, slot, owner, active, n_dev, caps[0], axis)
+                    vals, slot, owner, active, n_dev, caps[0], axis,
+                    impl=impl)
             else:
                 recv_slot, recv_val, nd = owner_route_hier(
                     vals, slot, owner, active, pods[0], axis, pods[1],
-                    pod_axis, caps[0], caps[1])
+                    pod_axis, caps[0], caps[1], impl=impl)
             upd = reduce_received(recv_slot, recv_val, n_local,
-                                  prog.reduce_op)
+                                  prog.reduce_op, impl=impl)
             state2, frontier2 = prog.update(ctx, state, frontier, upd)
             return state2, frontier2, m, gsum(nd.astype(jnp.int32))
 

@@ -39,6 +39,25 @@ def test_histogram_property(seed, logbins):
     assert (got == ref.histogram_ref(els, bins)).all()
 
 
+@pytest.mark.parametrize("n,bins", [(997, 61), (1031, 257), (7, 3),
+                                    (1024, 509), (1025, 256)])
+def test_histogram_non_tile_aligned(n, bins):
+    """Prime / off-tile shapes: the tails are padded and sliced, not
+    asserted away (regression for the hard tile-divisibility assert)."""
+    els = jax.random.randint(jax.random.key(n * bins), (n,), 0, bins)
+    got = histogram_pallas(els, bins)
+    assert got.shape == (bins,)
+    assert int(got.sum()) == n
+    assert (got == ref.histogram_ref(els, bins)).all()
+
+
+def test_histogram_negative_ids_are_no_ops():
+    """-1 sentinel entries (task-stream padding) match no bin."""
+    els = jnp.asarray([0, -1, 2, -1, 2], jnp.int32)
+    got = histogram_pallas(els, 3)
+    assert got.tolist() == [1, 0, 2]
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -20,9 +20,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.routing import bucket, positions_by_dest, round8
+from repro.core.routing import (bucket, pack_wire, positions_by_dest,
+                                round8, unpack_wire)
 
 
 # ---------------------------------------------------------------------------
@@ -181,3 +183,51 @@ def test_drop_count_matches_oracle_and_task_engine(cases):
 def test_some_case_actually_dropped(cases):
     """The grid must exercise the overflow path, not just the happy path."""
     assert any(c["drops"] > 0 for c in cases)
+
+
+# ---------------------------------------------------------------------------
+# Part C: fused-payload wire packing (what fused_all_to_all puts on the NoC)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 9),
+       n_int=st.integers(0, 3),
+       dtype=st.sampled_from(["bfloat16", "float16"]))
+def test_half_width_packing_round_trips_exactly(seed, d, n_int, dtype):
+    """bf16/f16 payloads with any D (odd included) round-trip bitwise and
+    ride two-per-f32-lane: the wire never inflates beyond
+    ceil(D/2) + n_int columns."""
+    rng = np.random.default_rng(seed)
+    n = 16
+    # raw bit patterns (not just round numbers): bitcast must be exact
+    vals = jnp.asarray(rng.random((n, d)) * 100 - 50).astype(dtype)
+    ints = [jnp.asarray(rng.integers(-2**31, 2**31 - 1, n), jnp.int32)
+            for _ in range(n_int)]
+    packed, meta = pack_wire(vals, ints)
+    assert packed.dtype == jnp.float32
+    assert packed.shape == (n, -(-d // 2) + n_int)      # never inflates
+    v_out, ints_out = unpack_wire(packed, meta)
+    assert v_out.dtype == vals.dtype
+    assert jnp.array_equal(
+        jax.lax.bitcast_convert_type(v_out, jnp.uint16),
+        jax.lax.bitcast_convert_type(vals, jnp.uint16))
+    for a, b in zip(ints, ints_out):
+        assert jnp.array_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 5))
+def test_f32_and_1d_packing_round_trip(seed, d):
+    rng = np.random.default_rng(seed)
+    n = 8
+    vals2 = jnp.asarray(rng.random((n, d)), jnp.float32)
+    ints = [jnp.asarray(rng.integers(0, 100, n), jnp.int32)]
+    packed, meta = pack_wire(vals2, ints)
+    assert packed.shape == (n, d + 1)
+    v_out, (i_out,) = unpack_wire(packed, meta)
+    assert jnp.array_equal(v_out, vals2) and jnp.array_equal(i_out, ints[0])
+    vals1 = jnp.asarray(rng.random(n), jnp.float32)      # [N] squeeze path
+    packed, meta = pack_wire(vals1, [])
+    v_out, empty = unpack_wire(packed, meta)
+    assert v_out.shape == (n,) and jnp.array_equal(v_out, vals1)
+    assert empty == []
