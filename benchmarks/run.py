@@ -42,6 +42,12 @@ def main() -> None:
         ("noc_routing", lambda: subprocess.run(
             [sys.executable, "-m", "benchmarks.noc_routing",
              "--scale", str(min(scale, 11))], check=True)),
+        # subprocess for the same reason: the resident serving bench
+        # wants its own fake-device topology
+        ("serve_bench", lambda: subprocess.run(
+            [sys.executable, "-m", "benchmarks.serve_bench"]
+            + (["--smoke", "--devices", "4"] if args.quick else []),
+            check=True)),
         ("roofline_table", roofline_table.main),
     ]
     failures = []

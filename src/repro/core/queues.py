@@ -87,6 +87,22 @@ class QueueConfig:
         cap = int(tasks_per_round * factor / max(n_channels, 1))
         return round8(cap) if lane_align else max(1, cap)
 
+    def round_budget(self, task: str, tasks_per_round: int,
+                     n_channels: int) -> Optional[int]:
+        """Total per-round admission budget for ``task``: the per-channel
+        IQ capacity times the channel count — what a whole tenant may
+        inject into the NoC in one round before overflowing its queues.
+
+        This is the serving tier's admission-control knob
+        (:class:`repro.serve.engine.ProgramServer`): a request whose
+        estimated per-round task demand exceeds its tenant's budget is
+        rejected with a retriable status *before* launch, instead of
+        silently dropping tasks in flight. ``None`` = unbounded (no
+        admission limit).
+        """
+        cap = self.channel_cap(task, tasks_per_round, n_channels)
+        return None if cap is None else int(cap) * max(1, n_channels)
+
     @classmethod
     def unbounded(cls) -> "QueueConfig":
         """Legacy physics: no IQ bound, no modeled drops."""

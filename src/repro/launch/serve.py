@@ -19,18 +19,22 @@ from ..models.model_zoo import build_model
 def serve(cfg, model, params, prompts: jax.Array, gen: int):
     """prompts [B, P] -> generated [B, gen] (greedy)."""
     B, P = prompts.shape
+    if gen <= 0:
+        # nothing to generate: [B, 0], same dtype as the generated ids
+        return jnp.zeros((B, 0), jnp.int32)
     cache = model.init_cache(B, P + gen, jnp.float32)
     decode = jax.jit(model.decode_step)
     # prefill by teacher-forcing the prompt through the decode path (keeps
     # one compiled step; a chunked prefill kernel is the TPU optimization)
     tok = prompts[:, :1]
+    out = []
     for t in range(P + gen - 1):
         logits, cache = decode(params, cache, tok, jnp.array(t, jnp.int32))
         nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        # the last prompt token's logits (t == P-1) emit the first
+        # generated id; with P == 1 that is the very first step
         tok = prompts[:, t + 1:t + 2] if t + 1 < P else nxt
-        if t == P - 1:
-            out = [tok]
-        elif t >= P:
+        if t >= P - 1:
             out.append(tok)
     return jnp.concatenate(out, axis=1)
 

@@ -41,13 +41,19 @@ class StragglerWatchdog:
     factor: float = 3.0
     window: int = 16
     history: List[float] = field(default_factory=list)
+    steps: List[int] = field(default_factory=list)   # step of each entry
     flagged: List[int] = field(default_factory=list)
     on_straggler: Optional[Callable[[int, float], None]] = None
 
     def observe(self, step: int, seconds: float):
         hist = self.history[-self.window:]
         if len(hist) >= 4:
-            med = sorted(hist)[len(hist) // 2]
+            # true median: even windows average the two middle elements
+            # (the upper-mid element alone biases the threshold high and
+            # can mask stragglers behind one slow outlier in the window)
+            s = sorted(hist)
+            mid = len(s) // 2
+            med = s[mid] if len(s) % 2 else (s[mid - 1] + s[mid]) / 2.0
             if seconds > self.factor * med:
                 self.flagged.append(step)
                 log.warning("straggler: step %d took %.3fs (median %.3fs)",
@@ -55,6 +61,16 @@ class StragglerWatchdog:
                 if self.on_straggler:
                     self.on_straggler(step, seconds)
         self.history.append(seconds)
+        self.steps.append(step)
+
+    def rollback(self, step: int):
+        """Forget observations for steps >= ``step``: they roll back on a
+        checkpoint restart and will be re-observed on replay — keeping
+        them would double-count replayed steps and pollute the median."""
+        keep = [i for i, s in enumerate(self.steps) if s < step]
+        self.history = [self.history[i] for i in keep]
+        self.steps = [self.steps[i] for i in keep]
+        self.flagged = [s for s in self.flagged if s < step]
 
 
 @dataclass
@@ -79,13 +95,12 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
     """
     watchdog = watchdog or StragglerWatchdog()
     restarts = 0
-    history: List[dict] = []
+    history: List[tuple] = []          # (step, metrics) — deduped on restart
 
     def load_or_init():
         last = ckpt.latest_step(ckpt_dir)
         if last is None:
             return 0, init_state()
-        import jax
         state = init_state()
         restored = ckpt.restore(ckpt_dir, last, state, shardings)
         return last + 1, restored
@@ -102,7 +117,7 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
             state = (params, opt_state)
             dt = time.perf_counter() - t0
             watchdog.observe(step, dt)
-            history.append({k: float(v) for k, v in metrics.items()})
+            history.append((step, {k: float(v) for k, v in metrics.items()}))
             if (step + 1) % ckpt_every == 0 or step + 1 == total_steps:
                 ckpt.save(ckpt_dir, step, state)
             step += 1
@@ -112,4 +127,11 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
             if restarts > max_restarts:
                 raise
             step, state = load_or_init()
-    return TrainLoopResult(step, restarts, history, watchdog.flagged)
+            # steps after the restored point re-run: drop their metrics
+            # and watchdog observations or the replay double-counts them
+            # (duplicate metrics_history entries, polluted straggler
+            # median)
+            history = [(s, m) for s, m in history if s < step]
+            watchdog.rollback(step)
+    return TrainLoopResult(step, restarts, [m for _, m in history],
+                           watchdog.flagged)

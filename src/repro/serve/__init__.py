@@ -1,0 +1,25 @@
+"""Resident serving runtime — TaskPrograms as a service.
+
+DCRA's pitch is a compute node for scale-out sparse data processing under
+*sustained* irregular traffic (Nexus Machine frames the same workloads as
+continuously-arriving active messages, arXiv 2502.12380). This package is
+that tier: a :class:`~repro.serve.engine.ProgramServer` keeps jitted
+program callables warm (the PR 4 compile cache plus an explicit pre-warm
+API), fuses many tenants' graph queries into one tenant-column frontier so
+a single shard_map round serves N tenants, applies admission control
+through :class:`~repro.core.queues.QueueConfig` per-tenant round budgets
+(overflow -> graceful retriable rejection, never a silent drop), and
+exports per-tenant serving stats (queue depth, cache hit rate, drops,
+p50/p99 round latency).
+"""
+from .batching import (TenantBatch, batched_program, split_tenant_states,
+                       tenant_graph)
+from .engine import (MoEService, ProgramServer, Request, Response,
+                     STATUS_FAILED, STATUS_OK, STATUS_REJECTED)
+from .stats import ServingStats, TenantStats
+
+__all__ = [
+    "MoEService", "ProgramServer", "Request", "Response", "ServingStats",
+    "STATUS_FAILED", "STATUS_OK", "STATUS_REJECTED", "TenantBatch",
+    "TenantStats", "batched_program", "split_tenant_states", "tenant_graph",
+]

@@ -1,0 +1,118 @@
+"""Tenant-column batching: fuse N tenants' graph queries into ONE launch.
+
+A graph query (BFS/SSSP from a root) is a frontier computation over a
+fixed topology. To serve N tenants in one shard_map round, the base graph
+is expanded by a *tenant column*: base vertex ``v`` becomes the T virtual
+vertices ``t * n + v`` (tenant-blocked), every base edge is replicated
+once per tenant inside its own column, and the batched program's init rule
+(:func:`repro.sparse.jax_apps._multi_root_init`) seeds one root per
+tenant. Columns never interact — edge ``(t*n+u, t*n+v)`` stays inside
+tenant ``t`` — so each tenant's result is exactly its standalone run:
+
+* min-reduce programs (BFS/SSSP/WCC) are **bit-identical** to the
+  standalone ``run_program`` launch when no task drops: every final
+  distance is the same left-fold of f32 adds along the winning path, and
+  ``min`` is exact in f32 (asserted in tests/test_serve.py);
+* the cyclic owner layout stripes each column across all devices
+  (virtual vertex ``t*n+v`` lives on device ``(t*n+v) % n_dev``, uniform
+  over ``v``), so one tenant's hot frontier can't capsize a single
+  shard. The blocked id — NOT the interleaved ``v*T+t`` — matters: when
+  ``n_dev`` divides T, interleaving would pin every vertex of tenant t
+  to device ``t % n_dev``, serialising the whole column's traffic.
+
+The fused batch always has width ``T`` (short batches are padded with
+dummy root-0 columns, results discarded): one (program, graph, T) shape
+class -> ONE compile-cache entry, which is what the server pre-warms.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..sparse.csr import CSR, from_edges
+from ..sparse.jax_apps import BATCHED_BFS, BATCHED_SSSP, TaskProgram
+
+# base program name -> tenant-batched variant (same payload/update rules,
+# multi-root init). Only min-reduce programs batch exactly — float adds
+# commute per-column here because columns are disjoint, but an add-reduce
+# program (pagerank) still sums in a different global order, so it is
+# deliberately NOT in this registry.
+BATCHED_PROGRAMS: Dict[str, TaskProgram] = {
+    "bfs": BATCHED_BFS,
+    "sssp": BATCHED_SSSP,
+}
+
+
+def batched_program(base_name: str) -> TaskProgram:
+    """The tenant-batched variant of a base program (KeyError for
+    programs that have none — add-reduce programs don't batch exactly)."""
+    return BATCHED_PROGRAMS[base_name]
+
+
+# graph id -> {T: expanded CSR}; the expansion is pure topology, shared by
+# every program and every request batch of the same width
+_TENANT_GRAPHS: Dict[Tuple[int, int], CSR] = {}
+
+
+def tenant_graph(g: CSR, n_tenants: int) -> CSR:
+    """Tenant-expand ``g``: ``n * T`` virtual vertices, ``nnz * T`` edges,
+    edge (u, v, w) -> (t*n+u, t*n+v, w) for every tenant column t.
+
+    Memoized by CSR object identity + T — the server's graph registry is
+    resident, so each (graph, batch width) expands exactly once.
+    """
+    T = int(n_tenants)
+    if T < 1:
+        raise ValueError(f"need at least one tenant column, got {T}")
+    key = (id(g), T)
+    got = _TENANT_GRAPHS.get(key)
+    if got is not None:
+        return got
+    rows = g.row_of()
+    cols = g.col_idx.astype(np.int64)
+    off = np.arange(T, dtype=np.int64) * g.n
+    src = (rows[None, :] + off[:, None]).ravel()
+    dst = (cols[None, :] + off[:, None]).ravel()
+    w = np.tile(g.values, T)
+    out = from_edges(g.n * T, src, dst, w)
+    _TENANT_GRAPHS[key] = out
+    return out
+
+
+def split_tenant_states(state: np.ndarray, n: int, n_tenants: int
+                        ) -> List[np.ndarray]:
+    """Undo the tenant column: one [n*T] state array -> T per-tenant [n]
+    arrays (tenant t's value for base vertex v sits at slot t*n + v)."""
+    return [np.ascontiguousarray(state.reshape(n_tenants, n)[t])
+            for t in range(n_tenants)]
+
+
+@dataclass
+class TenantBatch:
+    """One fused launch: up to T tenants' requests for the same
+    (program, graph) shape class, padded to exactly width T with dummy
+    root-0 columns (``req_ids[t] is None`` marks padding)."""
+    program: str                     # base program name ("bfs" | "sssp")
+    graph: str                       # server graph-registry key
+    width: int                       # T, the fixed tenant-column count
+    roots: Tuple[int, ...] = ()
+    tenants: List[str] = field(default_factory=list)
+    req_ids: List[Optional[int]] = field(default_factory=list)
+
+    @property
+    def n_real(self) -> int:
+        return sum(1 for r in self.req_ids if r is not None)
+
+    def padded(self) -> "TenantBatch":
+        pad = self.width - len(self.req_ids)
+        if pad < 0:
+            raise ValueError(f"batch overflows width {self.width}")
+        if pad == 0:
+            return self
+        return TenantBatch(
+            program=self.program, graph=self.graph, width=self.width,
+            roots=tuple(self.roots) + (0,) * pad,
+            tenants=list(self.tenants) + ["_pad"] * pad,
+            req_ids=list(self.req_ids) + [None] * pad)

@@ -1,0 +1,387 @@
+"""The resident ProgramServer: warm jitted TaskPrograms serving a stream.
+
+One server owns a mesh, a registry of resident graphs, and the TaskProgram
+compile cache. Life of a request:
+
+1. **Admission** — the tenant's :class:`~repro.core.queues.QueueConfig`
+   resolves a per-round task *budget* (:meth:`QueueConfig.round_budget`,
+   task class ``"serve"``). A request whose estimated per-round demand
+   (its graph's edge count / its token block's task count) does not fit
+   the tenant's remaining budget is rejected **before launch** with a
+   retriable status — admission replaces silent in-flight IQ drops.
+2. **Batching** — admitted graph queries of one (program, graph) shape
+   class are fused into a fixed-width tenant-column batch
+   (:mod:`repro.serve.batching`): one shard_map launch serves up to
+   ``batch_width`` tenants; short batches are padded so every launch hits
+   the SAME compile-cache entry.
+3. **Execution** — :func:`repro.sparse.program.run_program` on the
+   batched program; per-request results are the unpacked tenant columns,
+   bit-identical to standalone launches for the min-reduce programs.
+4. **Observability** — per-tenant and aggregate counters
+   (:mod:`repro.serve.stats`): queue depth, compile-cache hit rate,
+   NoC drops (always attributed, never swallowed), p50/p99 latency.
+
+MoE dispatch rides the same loop through :class:`MoEService`: token
+blocks are batched to a fixed [B, S, D] shape class and dispatched
+through one warm jitted ``moe_dcra`` callable.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..core.queues import QueueConfig
+from ..sparse import program as program_mod
+from ..sparse.csr import CSR
+from ..sparse.program import prewarm_program, run_program
+from .batching import (BATCHED_PROGRAMS, TenantBatch, batched_program,
+                       split_tenant_states, tenant_graph)
+from .stats import ServingStats
+
+STATUS_OK = "ok"
+STATUS_REJECTED = "rejected"          # admission control; always retriable
+STATUS_FAILED = "failed"
+
+#: the QueueConfig task class admission budgets resolve through
+ADMISSION_TASK = "serve"
+
+
+@dataclass(frozen=True)
+class Request:
+    """One unit of tenant traffic.
+
+    Graph queries name a resident ``graph`` and a ``root``; MoE dispatch
+    requests carry a ``payload`` token block [S, D] instead.
+    """
+    req_id: int
+    tenant: str
+    program: str                       # "bfs" | "sssp" | "moe"
+    graph: Optional[str] = None
+    root: int = 0
+    payload: Optional[np.ndarray] = None
+    params: Mapping = field(default_factory=dict)
+
+
+@dataclass
+class Response:
+    req_id: int
+    tenant: str
+    status: str                        # STATUS_OK | _REJECTED | _FAILED
+    retriable: bool = False
+    reason: str = ""
+    result: Optional[np.ndarray] = None
+    batch_drops: int = 0               # NoC drops of the fused launch
+    batch_messages: int = 0            # routed tasks of the fused launch
+    rounds: int = 0
+    batch_width: int = 0               # real tenants in the launch
+    latency_s: float = 0.0
+
+
+class ProgramServer:
+    """Resident serving engine over one mesh + graph registry.
+
+    ``tenant_queues`` maps tenant -> :class:`QueueConfig` admission
+    budget (``default_queues`` covers the rest; ``None`` = unbounded
+    admission). ``launch_queues`` sizes the actual NoC launches — the
+    default factor-4 sizing is drop-free for the serving graphs, which
+    is what keeps batched results bit-identical to standalone runs.
+    """
+
+    def __init__(self, mesh, graphs: Dict[str, CSR], *, axis: str = "data",
+                 batch_width: int = 4,
+                 tenant_queues: Optional[Dict[str, QueueConfig]] = None,
+                 default_queues: Optional[QueueConfig] = None,
+                 launch_queues: Optional[QueueConfig] = None,
+                 max_rounds: Optional[int] = None,
+                 moe: Optional["MoEService"] = None):
+        self.mesh = mesh
+        self.axis = axis
+        self.graphs = dict(graphs)
+        self.batch_width = int(batch_width)
+        self.tenant_queues = dict(tenant_queues or {})
+        self.default_queues = default_queues
+        self.launch_queues = launch_queues
+        self.max_rounds = max_rounds
+        self.moe = moe
+        self.stats = ServingStats()
+        self._queue: Deque[Request] = deque()
+        self._inflight_demand: Dict[str, int] = {}
+        self._n_dev = mesh.devices.size
+
+    # ---- admission -------------------------------------------------------
+
+    def _demand(self, req: Request) -> int:
+        """Estimated per-round task injection of one request: worst case,
+        every edge of the tenant's column emits (graph queries), or every
+        token spawns top-k expert tasks (MoE)."""
+        if req.program == "moe":
+            if self.moe is None:
+                raise ValueError("server has no MoEService configured")
+            return self.moe.demand(req.payload)
+        prog = batched_program(req.program)
+        g = self.graphs[req.graph]
+        return g.nnz * (2 if prog.undirected else 1)
+
+    def _budget(self, tenant: str, demand: int) -> Optional[int]:
+        q = self.tenant_queues.get(tenant, self.default_queues)
+        if q is None:
+            return None
+        return q.round_budget(ADMISSION_TASK, demand, self._n_dev)
+
+    def submit(self, req: Request) -> Optional[Response]:
+        """Admit ``req`` into the serving queue, or reject it.
+
+        Returns ``None`` on admission; a :data:`STATUS_REJECTED` response
+        (``retriable=True`` — the tenant may resubmit once its queued
+        work drains) when the tenant's per-round budget is exhausted.
+        Unknown programs/graphs fail loudly at submit time.
+        """
+        ts = self.stats.tenant(req.tenant)
+        ts.submitted += 1
+        if req.program != "moe" and req.program not in BATCHED_PROGRAMS:
+            ts.failed += 1
+            return Response(req.req_id, req.tenant, STATUS_FAILED,
+                            reason=f"no batched program {req.program!r}")
+        if req.program != "moe" and req.graph not in self.graphs:
+            ts.failed += 1
+            return Response(req.req_id, req.tenant, STATUS_FAILED,
+                            reason=f"unknown graph {req.graph!r}")
+        demand = self._demand(req)
+        budget = self._budget(req.tenant, demand)
+        pending = self._inflight_demand.get(req.tenant, 0)
+        if budget is not None and pending + demand > budget:
+            ts.rejected += 1
+            return Response(
+                req.req_id, req.tenant, STATUS_REJECTED, retriable=True,
+                reason=(f"tenant budget {budget} tasks/round: "
+                        f"{pending} pending + {demand} requested"))
+        self._inflight_demand[req.tenant] = pending + demand
+        self._queue.append(req)
+        self.stats.observe_queue_depth(len(self._queue))
+        return None
+
+    # ---- pre-warm --------------------------------------------------------
+
+    def prewarm(self, programs: Tuple[str, ...] = ("bfs", "sssp"),
+                graphs: Optional[Tuple[str, ...]] = None) -> Dict:
+        """Trace + compile every (program, graph, batch_width) shape
+        class before traffic arrives; returns {(program, graph): keys}.
+
+        Init-only roots are outside the compile-cache key, so one
+        pre-warm per shape class covers every later request batch.
+        """
+        out = {}
+        for name in programs:
+            if name == "moe":
+                if self.moe is not None:
+                    self.moe.prewarm(self.mesh)
+                continue
+            prog = batched_program(name)
+            for gname in (graphs if graphs is not None else self.graphs):
+                tg = tenant_graph(self.graphs[gname], self.batch_width)
+                keys = prewarm_program(
+                    prog, tg, self.mesh, axis=self.axis,
+                    queues=self.launch_queues,
+                    max_rounds=self.max_rounds,
+                    params={"roots": (0,) * self.batch_width})
+                out[(name, gname)] = keys
+                self.stats.prewarmed_keys += len(keys)
+        return out
+
+    # ---- the serving loop ------------------------------------------------
+
+    def _next_batch(self) -> List[Request]:
+        """Pop up to ``batch_width`` queued requests of the head-of-line
+        (program, graph) class, preserving arrival order of the rest.
+        At most one request per tenant rides a batch — each tenant owns
+        whole columns, so per-tenant results stay per-tenant."""
+        head = self._queue[0]
+        key = (head.program, head.graph)
+        width = (self.moe.batch if head.program == "moe"
+                 else self.batch_width)
+        taken: List[Request] = []
+        seen_tenants = set()
+        rest: Deque[Request] = deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if (len(taken) < width and (r.program, r.graph) == key
+                    and r.tenant not in seen_tenants):
+                taken.append(r)
+                seen_tenants.add(r.tenant)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return taken
+
+    def _finish(self, req: Request, resp: Response) -> Response:
+        self._inflight_demand[req.tenant] -= self._demand(req)
+        ts = self.stats.tenant(req.tenant)
+        if resp.status == STATUS_OK:
+            ts.served += 1
+        else:
+            ts.failed += 1
+        ts.noc_drops += resp.batch_drops
+        ts.messages += resp.batch_messages
+        ts.rounds += resp.rounds
+        ts.latencies.append(resp.latency_s)
+        return resp
+
+    def step(self) -> List[Response]:
+        """Serve one fused batch off the queue (empty list when idle)."""
+        if not self._queue:
+            return []
+        batch_reqs = self._next_batch()
+        if batch_reqs[0].program == "moe":
+            return self._step_moe(batch_reqs)
+        return self._step_graph(batch_reqs)
+
+    def _step_graph(self, reqs: List[Request]) -> List[Response]:
+        prog = batched_program(reqs[0].program)
+        gname = reqs[0].graph
+        g = self.graphs[gname]
+        batch = TenantBatch(
+            program=reqs[0].program, graph=gname, width=self.batch_width,
+            roots=tuple(int(r.root) for r in reqs),
+            tenants=[r.tenant for r in reqs],
+            req_ids=[r.req_id for r in reqs]).padded()
+        tg = tenant_graph(g, self.batch_width)
+        c0 = program_mod.cache_stats()
+        t0 = time.perf_counter()
+        try:
+            (state,), app_stats = run_program(
+                prog, tg, self.mesh, axis=self.axis,
+                queues=self.launch_queues, max_rounds=self.max_rounds,
+                params={"roots": batch.roots})
+        except Exception as e:  # noqa: BLE001 — a failed launch must not
+            # take the server down; every rider gets a non-retriable
+            # failure (the request itself is suspect, not the capacity)
+            dt = time.perf_counter() - t0
+            return [self._finish(r, Response(
+                r.req_id, r.tenant, STATUS_FAILED, latency_s=dt,
+                reason=f"{type(e).__name__}: {e}")) for r in reqs]
+        dt = time.perf_counter() - t0
+        c1 = program_mod.cache_stats()
+        self.stats.cache_hits += c1["hits"] - c0["hits"]
+        self.stats.cache_misses += c1["misses"] - c0["misses"]
+        self.stats.launches += 1
+        self.stats.batched_requests += batch.n_real
+        self.stats.pad_columns += self.batch_width - batch.n_real
+        self.stats.noc_drops += app_stats.total_drops
+        self.stats.round_latencies.append(dt / max(1, app_stats.rounds))
+        per_tenant = split_tenant_states(state, g.n, self.batch_width)
+        return [self._finish(r, Response(
+            r.req_id, r.tenant, STATUS_OK, result=per_tenant[i],
+            batch_drops=app_stats.total_drops,
+            batch_messages=app_stats.total_messages,
+            rounds=app_stats.rounds,
+            batch_width=batch.n_real, latency_s=dt))
+            for i, r in enumerate(reqs)]
+
+    def _step_moe(self, reqs: List[Request]) -> List[Response]:
+        t0 = time.perf_counter()
+        try:
+            outs, hit = self.moe.dispatch([r.payload for r in reqs],
+                                          self.mesh)
+        except Exception as e:  # noqa: BLE001
+            dt = time.perf_counter() - t0
+            return [self._finish(r, Response(
+                r.req_id, r.tenant, STATUS_FAILED, latency_s=dt,
+                reason=f"{type(e).__name__}: {e}")) for r in reqs]
+        dt = time.perf_counter() - t0
+        self.stats.cache_hits += int(hit)
+        self.stats.cache_misses += int(not hit)
+        self.stats.launches += 1
+        self.stats.batched_requests += len(reqs)
+        self.stats.pad_columns += self.moe.batch - len(reqs)
+        self.stats.round_latencies.append(dt)
+        return [self._finish(r, Response(
+            r.req_id, r.tenant, STATUS_OK, result=outs[i], rounds=1,
+            batch_width=len(reqs), latency_s=dt))
+            for i, r in enumerate(reqs)]
+
+    def drain(self) -> List[Response]:
+        out: List[Response] = []
+        while self._queue:
+            out.extend(self.step())
+        return out
+
+    def run(self, requests: List[Request]) -> List[Response]:
+        """Convenience: submit a whole stream, drain, return responses in
+        ``req_id`` order (rejections included — nothing is dropped)."""
+        responses: List[Response] = []
+        for req in requests:
+            rej = self.submit(req)
+            if rej is not None:
+                responses.append(rej)
+        responses.extend(self.drain())
+        return sorted(responses, key=lambda r: r.req_id)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+
+class MoEService:
+    """MoE dispatch as a serving lane: one warm jitted ``moe_dcra`` over a
+    fixed [batch, seq, d_model] shape class; short batches zero-pad.
+
+    ``traces`` counts actual jit traces (incremented inside the traced
+    function, so a warm call leaves it unchanged) — the MoE analogue of
+    the TaskProgram compile cache's no-re-trace assertion.
+    """
+
+    def __init__(self, cfg, params, info, batch: int = 4, seq: int = 16):
+        if cfg.moe is None:
+            raise ValueError("MoEService needs a config with cfg.moe set")
+        self.cfg, self.params, self.info = cfg, params, info
+        self.batch, self.seq = int(batch), int(seq)
+        self.calls = 0
+        self.traces = 0
+        self._fn = None
+
+    def demand(self, payload: Optional[np.ndarray]) -> int:
+        seq = self.seq if payload is None else int(payload.shape[0])
+        return seq * self.cfg.moe.top_k
+
+    def _build(self):
+        import jax
+
+        from ..core.dispatch import moe_dcra
+
+        def f(params, x):
+            self.traces += 1
+            return moe_dcra(params, x, self.cfg, self.info)
+
+        return jax.jit(f)
+
+    def prewarm(self, mesh) -> None:
+        x = np.zeros((self.batch, self.seq, self.cfg.d_model), np.float32)
+        self._dispatch_block(x, mesh)
+
+    def _dispatch_block(self, x: np.ndarray, mesh):
+        from ..core.compat import set_mesh
+        if self._fn is None:
+            self._fn = self._build()
+        before = self.traces
+        with set_mesh(mesh):
+            out, _aux = self._fn(self.params, x)
+        self.calls += 1
+        return np.asarray(out), self.traces == before
+
+    def dispatch(self, payloads: List[np.ndarray], mesh
+                 ) -> Tuple[List[np.ndarray], bool]:
+        """Fuse up to ``batch`` [seq, d_model] token blocks into one
+        dispatch; returns (per-request outputs, warm-cache hit)."""
+        for p in payloads:
+            if p is None or p.shape != (self.seq, self.cfg.d_model):
+                raise ValueError(
+                    f"MoE payload must be [{self.seq}, {self.cfg.d_model}]")
+        x = np.zeros((self.batch, self.seq, self.cfg.d_model), np.float32)
+        for i, p in enumerate(payloads):
+            x[i] = p
+        out, hit = self._dispatch_block(x, mesh)
+        return [out[i] for i in range(len(payloads))], hit

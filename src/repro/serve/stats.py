@@ -1,0 +1,104 @@
+"""Serving observability: per-tenant / per-round counters and latency
+quantiles — the repo's first serving-stats layer.
+
+Everything is plain counters + a latency reservoir; ``snapshot()``
+renders one JSON-able dict (the CI smoke leg and ``serve_bench`` assert
+on it). Accounting invariant (asserted by :meth:`ServingStats.verify`):
+every submitted request is exactly one of served / rejected / failed —
+nothing is silently dropped — and every NoC-level task drop the engine
+observed is attributed to a response (``noc_drops``), never swallowed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+def _quantile(xs: List[float], q: float) -> float:
+    """Nearest-rank quantile (no numpy dependency for the hot path)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+    return s[i]
+
+
+@dataclass
+class TenantStats:
+    submitted: int = 0
+    served: int = 0
+    rejected: int = 0                 # admission-control, retriable
+    failed: int = 0
+    # launch-level attribution: drops/messages/rounds of every fused
+    # launch this tenant rode (columns share one NoC, so per-column
+    # splits don't exist at the engine level)
+    noc_drops: int = 0                # IQ-overflow task drops
+    messages: int = 0                 # routed tasks
+    rounds: int = 0                   # NoC rounds
+    latencies: List[float] = field(default_factory=list)
+
+    def snapshot(self) -> Dict:
+        return {
+            "submitted": self.submitted, "served": self.served,
+            "rejected": self.rejected, "failed": self.failed,
+            "noc_drops": self.noc_drops, "messages": self.messages,
+            "rounds": self.rounds,
+            "p50_latency_s": _quantile(self.latencies, 0.50),
+            "p99_latency_s": _quantile(self.latencies, 0.99),
+        }
+
+
+@dataclass
+class ServingStats:
+    """Aggregate + per-tenant serving counters."""
+    tenants: Dict[str, TenantStats] = field(default_factory=dict)
+    noc_drops: int = 0                # aggregate IQ-overflow task drops
+    launches: int = 0                 # fused shard_map launches
+    batched_requests: int = 0         # real (non-padding) requests served
+    pad_columns: int = 0              # dummy columns burned on padding
+    cache_hits: int = 0               # TaskProgram compile-cache hits
+    cache_misses: int = 0
+    prewarmed_keys: int = 0
+    queue_depth_samples: List[int] = field(default_factory=list)
+    round_latencies: List[float] = field(default_factory=list)
+
+    def tenant(self, name: str) -> TenantStats:
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = TenantStats()
+        return ts
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depth_samples.append(int(depth))
+
+    def verify(self) -> None:
+        """The no-silent-drop ledger: submitted == served + rejected +
+        failed, per tenant (in-flight requests must be drained first)."""
+        for name, ts in self.tenants.items():
+            acc = ts.served + ts.rejected + ts.failed
+            if ts.submitted != acc:
+                raise AssertionError(
+                    f"tenant {name!r}: {ts.submitted} submitted but only "
+                    f"{acc} accounted (served {ts.served} + rejected "
+                    f"{ts.rejected} + failed {ts.failed})")
+
+    def snapshot(self) -> Dict:
+        return {
+            "noc_drops": self.noc_drops,
+            "launches": self.launches,
+            "batched_requests": self.batched_requests,
+            "pad_columns": self.pad_columns,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": self.cache_hit_rate,
+            "prewarmed_keys": self.prewarmed_keys,
+            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "p50_round_latency_s": _quantile(self.round_latencies, 0.50),
+            "p99_round_latency_s": _quantile(self.round_latencies, 0.99),
+            "tenants": {t: s.snapshot() for t, s in self.tenants.items()},
+        }

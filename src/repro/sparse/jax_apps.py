@@ -145,6 +145,20 @@ def _dist_init(g, params):
     return (dist,), (np.inf,)
 
 
+def _multi_root_init(g, params):
+    """Tenant-column init: ``g`` is a tenant-expanded graph (vertex
+    ``t * n + v`` is base vertex ``v`` in tenant ``t``'s column, see
+    :func:`repro.serve.batching.tenant_graph`); ``params['roots']`` holds
+    one root per tenant. One frontier array carries all T tenants, so a
+    single shard_map round serves the whole batch."""
+    roots = params["roots"]
+    n = g.n // len(roots)
+    dist = np.full(g.n, np.inf)
+    for t, root in enumerate(roots):
+        dist[t * n + int(root)] = 0.0
+    return (dist,), (np.inf,)
+
+
 def _label_init(g, params):
     return (np.arange(g.n, dtype=np.float64),), (np.inf,)
 
@@ -176,11 +190,26 @@ def _min_update(ctx, state, frontier, upd):
 
 BFS = TaskProgram(name="bfs", reduce_op="min", payload=_hops_payload,
                   init=_dist_init, frontier0=_finite_frontier,
-                  update=_min_update)
+                  update=_min_update, init_only=("root",))
 
 SSSP = TaskProgram(name="sssp", reduce_op="min", payload=_weight_payload,
                    init=_dist_init, frontier0=_finite_frontier,
-                   update=_min_update, max_rounds=256)
+                   update=_min_update, max_rounds=256,
+                   init_only=("root",))
+
+# Tenant-batched serving variants (the resident-serving tier's fused
+# multi-root launch, :mod:`repro.serve`): the SAME payload/update rules —
+# only init differs, reading per-tenant roots. ``roots`` is init-only, so
+# every request batch of one shape class reuses one jitted callable.
+BATCHED_BFS = TaskProgram(name="bfs_batched", reduce_op="min",
+                          payload=_hops_payload, init=_multi_root_init,
+                          frontier0=_finite_frontier, update=_min_update,
+                          init_only=("roots",))
+
+BATCHED_SSSP = TaskProgram(name="sssp_batched", reduce_op="min",
+                           payload=_weight_payload, init=_multi_root_init,
+                           frontier0=_finite_frontier, update=_min_update,
+                           max_rounds=256, init_only=("roots",))
 
 WCC = TaskProgram(name="wcc", reduce_op="min", payload=_label_payload,
                   init=_label_init, frontier0=_all_frontier,

@@ -138,6 +138,13 @@ class TaskProgram:
     task: str = "T3"                       # QueueConfig task class
     default_capacity_factor: float = 4.0
     max_rounds: int = 128                  # "while" bound (overridable)
+    # Params consumed ONLY by the host-side ``init`` rule (e.g. BFS/SSSP
+    # roots): excluded from the compile-cache key AND stripped from the
+    # traced kernel's Ctx, so same-shape launches that differ only in
+    # these params reuse the jitted callable (a rule that reads one
+    # anyway fails loudly with a KeyError at trace time). This is what
+    # makes the serving tier's per-request roots cache-transparent.
+    init_only: Tuple[str, ...] = ()
     # graph rules ----------------------------------------------------------
     init: Optional[Callable] = None        # (g, params) -> (states, fills)
     frontier0: Optional[Callable] = None   # (ctx, state) -> bool mask
@@ -330,6 +337,29 @@ def _cached(key, build):
     return fn
 
 
+def cache_keys() -> Tuple[tuple, ...]:
+    """The live compile-cache keys (the serving tier asserts pre-warm
+    populates exactly the expected shape classes)."""
+    return tuple(_CACHE)
+
+
+def prewarm_program(prog: TaskProgram, data, mesh, **kwargs) -> Tuple[tuple,
+                                                                      ...]:
+    """Trace + compile the jitted callable(s) for one (program,
+    shape-class, mesh) before real traffic arrives.
+
+    Runs one throwaway launch — jit compiles on first execution, so the
+    throwaway run IS the warm-up — and returns the cache keys it
+    populated (empty tuple = that shape class was already warm). Params
+    named in ``prog.init_only`` (per-request roots and friends) are not
+    part of the key, so a single pre-warm covers every later request in
+    the same shape class.
+    """
+    before = set(_CACHE)
+    run_program(prog, data, mesh, **kwargs)
+    return tuple(k for k in _CACHE if k not in before)
+
+
 # ---------------------------------------------------------------------------
 # the one-round owner-routed scatter (stream programs; public API)
 # ---------------------------------------------------------------------------
@@ -520,12 +550,16 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
         rounds = int(max_rounds if max_rounds is not None
                      else prog.max_rounds)
 
+    # init-only params (per-request roots etc.) feed the packed state
+    # arrays, never the traced rules — keep them out of the key and out
+    # of the kernel's Ctx so serving-style request streams hit the cache
+    kparams = {k: v for k, v in params.items() if k not in prog.init_only}
     key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
-           impl, rounds, len(packed), tuple(sorted(params.items())),
+           impl, rounds, len(packed), tuple(sorted(kparams.items())),
            _mesh_key(mesh))
     fn = _cached(key, lambda: _build_graph_fn(
         prog, mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
-        params, rounds, len(packed), impl))
+        kparams, rounds, len(packed), impl))
     out = fn(src_slot, dst, w, *packed)
     states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
     stats = _collect_stats(r, msgs, drops)

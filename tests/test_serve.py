@@ -1,0 +1,319 @@
+"""The resident serving runtime (:mod:`repro.serve`).
+
+Part A — host-side pieces: tenant-graph expansion, column split, batch
+padding, QueueConfig round budgets.
+
+Part B (subprocess, 8 fake host devices) — the serving contract:
+
+* a mixed stream of 4 tenants x 2 programs completes with every
+  per-tenant result **bit-identical** to the equivalent standalone
+  ``run_program`` launch;
+* pre-warm populates exactly one compile-cache key per (program, graph,
+  batch-width) shape class, and the whole request stream afterwards is
+  cache hits only — zero new jit traces under serving load (the
+  ``cache_stats``/``_cached`` serving-load coverage);
+* admission control: an undersized per-tenant budget rejects with a
+  retriable status (never a silent drop), accounting balances, and a
+  drained tenant's retry is admitted;
+* undersized *launch* queues produce NoC drops that are attributed to
+  responses and stats, never swallowed;
+* the MoE lane serves batched token blocks through one warm jitted
+  dispatch (no re-trace after warm-up) and matches the einsum oracle.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Part A: host-side pieces
+# ---------------------------------------------------------------------------
+
+def test_tenant_graph_expansion_blocked_layout():
+    from repro.serve.batching import split_tenant_states, tenant_graph
+    from repro.sparse import datasets
+    g = datasets.erdos_renyi(48, avg_degree=4, seed=2)
+    T = 3
+    tg = tenant_graph(g, T)
+    assert tg.n == g.n * T and tg.nnz == g.nnz * T
+    rows, cols = tg.row_of(), tg.col_idx.astype(np.int64)
+    # every edge stays inside its tenant column (blocked ids: t*n + v)
+    assert np.array_equal(rows // g.n, cols // g.n)
+    # each column holds exactly the base edge set
+    base = set(zip(g.row_of().tolist(), g.col_idx.tolist()))
+    for t in range(T):
+        sel = rows // g.n == t
+        col_edges = set(zip((rows[sel] - t * g.n).tolist(),
+                            (cols[sel] - t * g.n).tolist()))
+        assert col_edges == base
+    # memoized by identity
+    assert tenant_graph(g, T) is tg
+    # split is the exact inverse of the blocked packing
+    state = np.arange(g.n * T, dtype=np.float64)
+    parts = split_tenant_states(state, g.n, T)
+    for t in range(T):
+        assert np.array_equal(parts[t], state[t * g.n:(t + 1) * g.n])
+
+
+def test_tenant_batch_padding():
+    from repro.serve.batching import TenantBatch
+    b = TenantBatch(program="bfs", graph="g", width=4, roots=(5, 9),
+                    tenants=["a", "b"], req_ids=[1, 2]).padded()
+    assert b.roots == (5, 9, 0, 0) and b.n_real == 2
+    assert b.req_ids == [1, 2, None, None]
+    with pytest.raises(ValueError):
+        TenantBatch(program="bfs", graph="g", width=1, roots=(1, 2),
+                    tenants=["a", "b"], req_ids=[1, 2]).padded()
+
+
+def test_queueconfig_round_budget():
+    from repro.core.queues import QueueConfig
+    assert QueueConfig.from_cap(5, "serve").round_budget("serve", 100, 4) \
+        == 20
+    # factor sizing: per-channel cap is lane-aligned, budget scales by it
+    q = QueueConfig.from_factor(1.0, "serve")
+    cap = q.channel_cap("serve", 100, 4)
+    assert q.round_budget("serve", 100, 4) == cap * 4
+    # unbounded -> no admission limit
+    assert QueueConfig.unbounded().round_budget("serve", 100, 4) is None
+
+
+def test_batched_program_registry():
+    from repro.serve.batching import batched_program
+    assert batched_program("bfs").init_only == ("roots",)
+    assert batched_program("sssp").reduce_op == "min"
+    with pytest.raises(KeyError):
+        batched_program("pagerank")   # add-reduce: no exact batching
+
+
+# ---------------------------------------------------------------------------
+# Part B: the serving contract under shard_map (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import dataclasses
+import json
+import numpy as np
+import jax
+from repro.core.compat import make_mesh
+from repro.core.queues import QueueConfig
+from repro.sparse import datasets, program
+from repro.sparse.jax_apps import BFS, SSSP
+from repro.sparse.program import run_program
+from repro.serve import (MoEService, ProgramServer, Request,
+                         STATUS_OK, STATUS_REJECTED)
+
+res = {}
+g = datasets.wiki_like(192, avg_degree=6, seed=3)
+mesh = make_mesh((4,), ('data',))
+WIDTH = 4
+
+# ---- pre-warm populates exactly the expected keys ----------------------
+program.clear_cache()
+srv = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH)
+warm = srv.prewarm(('bfs', 'sssp'))
+res['warm'] = {'keys_per_class': {f'{p}/{gn}': len(ks)
+                                  for (p, gn), ks in warm.items()},
+               'cache': program.cache_stats(),
+               'n_cache_keys': len(program.cache_keys())}
+warm2 = srv.prewarm(('bfs', 'sssp'))      # idempotent: nothing new
+res['warm_again'] = {'new_keys': sum(len(k) for k in warm2.values()),
+                     'cache': program.cache_stats()}
+
+# ---- mixed 4-tenant x 2-program stream under serving load --------------
+TENANTS = ['acme', 'globex', 'initech', 'umbrella']
+reqs = [Request(i, TENANTS[i % 4], 'bfs' if i % 2 == 0 else 'sssp',
+                'wiki', root=(i * 13) % g.n) for i in range(16)]
+c0 = program.cache_stats()
+resps = srv.run(reqs)
+c1 = program.cache_stats()
+res['stream'] = {
+    'statuses': [r.status for r in resps],
+    'new_hits': c1['hits'] - c0['hits'],
+    'new_misses': c1['misses'] - c0['misses'],
+    'new_traces': c1['kernel_traces'] - c0['kernel_traces'],
+    'identical': [], 'drops': sum(r.batch_drops for r in resps)}
+for r, resp in zip(reqs, resps):
+    prog = BFS if r.program == 'bfs' else SSSP
+    (d,), _ = run_program(prog, g, mesh, params={'root': r.root})
+    res['stream']['identical'].append(
+        bool(np.array_equal(d, resp.result)))
+srv.stats.verify()
+res['stats'] = srv.stats.snapshot()
+
+# ---- admission control: undersized per-tenant budget -------------------
+n_dev = 4
+one_req = QueueConfig.from_cap(g.nnz // n_dev + 1, 'serve')
+tiny = QueueConfig.from_cap(2, 'serve')
+srv2 = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                     tenant_queues={'acme': one_req, 'globex': tiny})
+r_ok = srv2.submit(Request(0, 'acme', 'bfs', 'wiki', root=1))
+r_over = srv2.submit(Request(1, 'acme', 'bfs', 'wiki', root=2))
+r_tiny = srv2.submit(Request(2, 'globex', 'bfs', 'wiki', root=3))
+drained = srv2.drain()
+r_retry = srv2.submit(Request(3, 'acme', 'bfs', 'wiki', root=2))
+drained += srv2.drain()
+srv2.stats.verify()
+res['admission'] = {
+    'first_admitted': r_ok is None,
+    'over_budget': None if r_over is None else
+        {'status': r_over.status, 'retriable': r_over.retriable},
+    'tiny_budget': None if r_tiny is None else
+        {'status': r_tiny.status, 'retriable': r_tiny.retriable},
+    'retry_after_drain_admitted': r_retry is None,
+    'served': [r.status for r in drained],
+    'tenant_stats': srv2.stats.snapshot()['tenants']}
+
+# ---- undersized LAUNCH queues: drops are attributed, never silent ------
+srv3 = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                     launch_queues=QueueConfig.from_cap(2, 'T3'))
+resp3 = srv3.run([Request(i, f't{i}', 'bfs', 'wiki', root=i)
+                  for i in range(2)])
+srv3.stats.verify()
+res['drops'] = {'batch_drops': [r.batch_drops for r in resp3],
+                'stats_drops': srv3.stats.noc_drops,
+                'statuses': [r.status for r in resp3]}
+
+# ---- MoE lane: batched dispatch, warm after one trace ------------------
+from repro.configs import get_config
+from repro.core.dispatch import MeshInfo
+from repro.models.moe import init_moe, moe_einsum
+cfg = get_config('olmoe-1b-7b').reduced()
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=8.0))
+params = init_moe(jax.random.key(0), cfg)
+mesh2 = make_mesh((2, 2, 2), ('data', 'expert', 'tp'))
+moe = MoEService(cfg, params, MeshInfo(mesh2, pod_axis=None),
+                 batch=4, seq=16)
+srv4 = ProgramServer(mesh2, {}, moe=moe)
+srv4.prewarm(('moe',))
+traces_after_warm = moe.traces
+rng = np.random.default_rng(0)
+blocks = [rng.normal(size=(16, cfg.d_model)).astype(np.float32)
+          for _ in range(6)]
+mreqs = [Request(i, f'm{i % 3}', 'moe', payload=b)
+         for i, b in enumerate(blocks)]
+mresps = srv4.run(mreqs)
+srv4.stats.verify()
+x = np.zeros((4, 16, cfg.d_model), np.float32)
+for i in range(4):
+    x[i] = blocks[i]
+oracle, _ = moe_einsum(params, x, cfg)
+err = max(float(np.max(np.abs(np.asarray(oracle)[i] - mresps[i].result)))
+          for i in range(4))
+res['moe'] = {'statuses': [r.status for r in mresps],
+              'traces_after_warm': traces_after_warm,
+              'traces_final': moe.traces, 'calls': moe.calls,
+              'oracle_err': err,
+              'cache_hits': srv4.stats.cache_hits,
+              'cache_misses': srv4.stats.cache_misses}
+print('RESULT ' + json.dumps(res))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_prewarm_populates_exactly_the_expected_keys(results):
+    w = results["warm"]
+    # one shape class per (program, graph, batch width) -> one key each
+    assert w["keys_per_class"] == {"bfs/wiki": 1, "sssp/wiki": 1}
+    assert w["n_cache_keys"] == 2
+    assert w["cache"]["misses"] == 2
+    assert w["cache"]["kernel_traces"] == 2
+    # idempotent: a second pre-warm adds nothing and re-traces nothing
+    again = results["warm_again"]
+    assert again["new_keys"] == 0
+    assert again["cache"]["misses"] == 2
+    assert again["cache"]["kernel_traces"] == 2
+
+
+def test_stream_serves_all_tenants_ok(results):
+    s = results["stream"]
+    assert s["statuses"] == ["ok"] * 16
+    assert s["drops"] == 0
+
+
+def test_results_bit_identical_to_standalone_runs(results):
+    assert all(results["stream"]["identical"])
+
+
+def test_serving_load_is_cache_hits_only(results):
+    """The cache_stats()/_cached contract under a mixed request stream:
+    after pre-warm, repeated mixed-program batches must be hits — no new
+    misses and, critically, zero new jit traces."""
+    s = results["stream"]
+    assert s["new_hits"] >= 4          # 16 reqs / width 4 = 4+ launches
+    assert s["new_misses"] == 0
+    assert s["new_traces"] == 0
+    stats = results["stats"]
+    assert stats["cache_hit_rate"] == 1.0
+    assert stats["launches"] >= 4
+    assert stats["batched_requests"] == 16
+
+
+def test_stats_snapshot_shape(results):
+    stats = results["stats"]
+    assert set(stats["tenants"]) == {"acme", "globex", "initech",
+                                     "umbrella"}
+    for ts in stats["tenants"].values():
+        assert ts["submitted"] == ts["served"] == 4
+        assert ts["p50_latency_s"] <= ts["p99_latency_s"]
+        assert ts["rounds"] > 0 and ts["messages"] > 0
+    assert stats["max_queue_depth"] >= 1
+    assert stats["p50_round_latency_s"] <= stats["p99_round_latency_s"]
+    assert stats["noc_drops"] == 0
+
+
+def test_admission_rejects_retriably_not_silently(results):
+    a = results["admission"]
+    assert a["first_admitted"]
+    assert a["over_budget"] == {"status": "rejected", "retriable": True}
+    assert a["tiny_budget"] == {"status": "rejected", "retriable": True}
+    assert a["retry_after_drain_admitted"]
+    assert a["served"] == ["ok", "ok"]
+    # the ledger balances: every submit is served or rejected
+    acme = a["tenant_stats"]["acme"]
+    assert acme["submitted"] == 3 and acme["served"] == 2
+    assert acme["rejected"] == 1
+    globex = a["tenant_stats"]["globex"]
+    assert globex["submitted"] == 1 and globex["rejected"] == 1
+
+
+def test_launch_queue_drops_are_attributed(results):
+    d = results["drops"]
+    assert d["statuses"] == ["ok", "ok"]
+    assert d["stats_drops"] > 0                    # tight cap really drops
+    assert all(b == d["stats_drops"] for b in d["batch_drops"])
+
+
+def test_moe_lane_warm_after_one_trace(results):
+    m = results["moe"]
+    assert m["statuses"] == ["ok"] * 6
+    assert m["traces_after_warm"] == 1
+    assert m["traces_final"] == 1                  # no re-trace under load
+    assert m["calls"] == 3                         # warm + 2 batches
+    assert m["oracle_err"] < 1e-5
+    assert m["cache_hits"] == 2 and m["cache_misses"] == 0
+
+
+def test_moe_lane_batches_by_fixed_width(results):
+    # 6 single-block requests from 3 tenants -> two fused launches of the
+    # fixed [4, 16, D] shape class (max one request per tenant per batch)
+    assert results["moe"]["calls"] - 1 == 2

@@ -1,0 +1,51 @@
+"""The LM serving driver (:func:`repro.launch.serve.serve`) edge cases.
+
+Regression: ``--gen 0`` used to raise ``UnboundLocalError`` — the
+``t == P - 1`` branch that initialised the output list never ran when no
+tokens were generated. Short prompts (P == 1) exercise the adjacent
+boundary where the first decode step already emits a generated token.
+
+Uses a deterministic stub model (predicts ``tok + 1 mod V``) so the test
+pins the prefill/decode indexing without paying for a real transformer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import serve
+
+V = 17
+
+
+class _StubModel:
+    """decode_step predicts (tok + 1) % V with probability one."""
+
+    def init_cache(self, B, L, dtype):
+        return jnp.zeros((B, 1), jnp.int32)
+
+    def decode_step(self, params, cache, tok, t):
+        logits = jax.nn.one_hot((tok + 1) % V, V, dtype=jnp.float32)
+        return logits, cache
+
+
+def _expected(prompts, gen):
+    """Greedy rollout of the stub: last prompt id + 1, +2, ... (mod V)."""
+    last = np.asarray(prompts)[:, -1:]
+    return (last + np.arange(1, gen + 1)) % V
+
+
+@pytest.mark.parametrize("B,P", [(2, 4), (1, 1), (3, 1)])
+def test_serve_gen_zero_returns_empty(B, P):
+    prompts = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P) % V
+    out = serve(None, _StubModel(), None, prompts, 0)
+    assert out.shape == (B, 0)
+
+
+@pytest.mark.parametrize("P,gen", [(4, 3), (1, 1), (1, 5), (2, 1)])
+def test_serve_short_prompts_greedy_decode(P, gen):
+    B = 2
+    prompts = (jnp.arange(B * P, dtype=jnp.int32).reshape(B, P) * 3 + 1) % V
+    out = serve(None, _StubModel(), None, prompts, gen)
+    assert out.shape == (B, gen)
+    assert np.array_equal(np.asarray(out), _expected(prompts, gen))

@@ -149,6 +149,55 @@ def test_straggler_watchdog_flags_slow_steps():
     assert 8 in wd.flagged
 
 
+def test_restart_does_not_double_count_replayed_steps(tmp_path):
+    """Regression: a mid-interval rollback re-runs the steps after the
+    last checkpoint; metrics_history and the watchdog must keep exactly
+    one entry per step (pre-fix they kept the pre-failure entries too)."""
+    init_state, step_fn = _toy_problem()
+
+    def step_fn_tagged(params, opt_state, batch):
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             jnp.array(1.0))
+        return params, opt_state, {**metrics, "step": batch}
+
+    wd = StragglerWatchdog()
+    # ckpt_every=4 -> checkpoint after step 3; failing at 6 rolls back to
+    # step 4, so steps 4 and 5 replay (a mid-interval rollback)
+    plan = FailurePlan(at_steps={6: "ici-timeout"})
+    res = run_training(step_fn_tagged, init_state,
+                       lambda s: jnp.array(float(s)), total_steps=12,
+                       ckpt_dir=str(tmp_path), ckpt_every=4,
+                       failure_plan=plan, watchdog=wd)
+    assert res.restarts == 1
+    steps = [int(m["step"]) for m in res.metrics_history]
+    assert steps == list(range(12))          # no duplicates, no holes
+    assert len(wd.history) == 12             # watchdog deduped too
+    assert wd.steps == list(range(12))
+
+
+def test_watchdog_rollback_drops_flags_of_replayed_steps():
+    wd = StragglerWatchdog(factor=2.0, window=8)
+    for i in range(8):
+        wd.observe(i, 0.01)
+    wd.observe(8, 0.5)
+    assert 8 in wd.flagged
+    wd.rollback(8)
+    assert wd.flagged == [] and len(wd.history) == 8
+
+
+def test_watchdog_median_is_true_median_for_even_windows():
+    """Regression: sorted(hist)[len//2] is the UPPER-mid element — with a
+    bimodal even window it biased the threshold high and masked a real
+    straggler. The true median (mean of the middle two) must flag it."""
+    wd = StragglerWatchdog(factor=3.0, window=4)
+    for i, dt in enumerate([0.001, 0.001, 0.1, 0.1]):
+        wd.observe(i, dt)
+    # true median = 0.0505 -> threshold 0.1515; upper-mid would have set
+    # the threshold at 0.3 and let this 0.2s step through unflagged
+    wd.observe(4, 0.2)
+    assert 4 in wd.flagged
+
+
 def test_resume_continues_not_restarts(tmp_path):
     """Second call resumes from the checkpoint (optimizer momentum kept)."""
     init_state, step_fn = _toy_problem()
