@@ -26,6 +26,7 @@ class -> ONE compile-cache entry, which is what the server pre-warms.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -51,9 +52,14 @@ def batched_program(base_name: str) -> TaskProgram:
     return BATCHED_PROGRAMS[base_name]
 
 
-# graph id -> {T: expanded CSR}; the expansion is pure topology, shared by
-# every program and every request batch of the same width
-_TENANT_GRAPHS: Dict[Tuple[int, int], CSR] = {}
+# (graph id, T) -> (weakref to the base CSR, expanded CSR); the expansion
+# is pure topology, shared by every program and every request batch of the
+# same width. The weakref guards against id() reuse: a lookup only counts
+# as a hit when the recorded referent IS the argument, and a dead
+# referent's entry is purged by the weakref callback, so the memo can't
+# serve a stale expansion of a garbage-collected graph and can't grow
+# past the set of live (graph, width) pairs.
+_TENANT_GRAPHS: Dict[Tuple[int, int], Tuple["weakref.ref[CSR]", CSR]] = {}
 
 
 def tenant_graph(g: CSR, n_tenants: int) -> CSR:
@@ -68,8 +74,8 @@ def tenant_graph(g: CSR, n_tenants: int) -> CSR:
         raise ValueError(f"need at least one tenant column, got {T}")
     key = (id(g), T)
     got = _TENANT_GRAPHS.get(key)
-    if got is not None:
-        return got
+    if got is not None and got[0]() is g:
+        return got[1]
     rows = g.row_of()
     cols = g.col_idx.astype(np.int64)
     off = np.arange(T, dtype=np.int64) * g.n
@@ -77,7 +83,8 @@ def tenant_graph(g: CSR, n_tenants: int) -> CSR:
     dst = (cols[None, :] + off[:, None]).ravel()
     w = np.tile(g.values, T)
     out = from_edges(g.n * T, src, dst, w)
-    _TENANT_GRAPHS[key] = out
+    ref = weakref.ref(g, lambda _r, _k=key: _TENANT_GRAPHS.pop(_k, None))
+    _TENANT_GRAPHS[key] = (ref, out)
     return out
 
 

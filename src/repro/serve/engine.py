@@ -7,8 +7,10 @@ compile cache. Life of a request:
    resolves a per-round task *budget* (:meth:`QueueConfig.round_budget`,
    task class ``"serve"``). A request whose estimated per-round demand
    (its graph's edge count / its token block's task count) does not fit
-   the tenant's remaining budget is rejected **before launch** with a
-   retriable status — admission replaces silent in-flight IQ drops.
+   the tenant's remaining budget is rejected **before launch** —
+   retriable when draining queued work could admit it, non-retriable
+   when its demand alone exceeds the budget — admission replaces silent
+   in-flight IQ drops.
 2. **Batching** — admitted graph queries of one (program, graph) shape
    class are fused into a fixed-width tenant-column batch
    (:mod:`repro.serve.batching`): one shard_map launch serves up to
@@ -43,7 +45,8 @@ from .batching import (BATCHED_PROGRAMS, TenantBatch, batched_program,
 from .stats import ServingStats
 
 STATUS_OK = "ok"
-STATUS_REJECTED = "rejected"          # admission control; always retriable
+STATUS_REJECTED = "rejected"          # admission control; retriable unless
+                                      # the request can never fit the budget
 STATUS_FAILED = "failed"
 
 #: the QueueConfig task class admission budgets resolve through
@@ -136,25 +139,51 @@ class ProgramServer:
         """Admit ``req`` into the serving queue, or reject it.
 
         Returns ``None`` on admission; a :data:`STATUS_REJECTED` response
-        (``retriable=True`` — the tenant may resubmit once its queued
-        work drains) when the tenant's per-round budget is exhausted.
-        Unknown programs/graphs fail loudly at submit time.
+        when the tenant's per-round budget is exhausted —
+        ``retriable=True`` when the request would fit an idle budget (the
+        tenant may resubmit once its queued work drains),
+        ``retriable=False`` when its demand alone exceeds the budget, so
+        no amount of draining could ever admit it. Unknown
+        programs/graphs and out-of-range roots fail loudly at submit
+        time.
         """
         ts = self.stats.tenant(req.tenant)
         ts.submitted += 1
-        if req.program != "moe" and req.program not in BATCHED_PROGRAMS:
-            ts.failed += 1
-            return Response(req.req_id, req.tenant, STATUS_FAILED,
-                            reason=f"no batched program {req.program!r}")
-        if req.program != "moe" and req.graph not in self.graphs:
-            ts.failed += 1
-            return Response(req.req_id, req.tenant, STATUS_FAILED,
-                            reason=f"unknown graph {req.graph!r}")
+        if req.program == "moe":
+            if self.moe is None:
+                ts.failed += 1
+                return Response(req.req_id, req.tenant, STATUS_FAILED,
+                                reason="server has no MoEService configured")
+        else:
+            if req.program not in BATCHED_PROGRAMS:
+                ts.failed += 1
+                return Response(req.req_id, req.tenant, STATUS_FAILED,
+                                reason=f"no batched program {req.program!r}")
+            if req.graph not in self.graphs:
+                ts.failed += 1
+                return Response(req.req_id, req.tenant, STATUS_FAILED,
+                                reason=f"unknown graph {req.graph!r}")
+            n = self.graphs[req.graph].n
+            if not 0 <= int(req.root) < n:
+                # an unchecked root would seed distance 0 inside ANOTHER
+                # tenant's column (_multi_root_init writes dist[t*n+root])
+                ts.failed += 1
+                return Response(
+                    req.req_id, req.tenant, STATUS_FAILED,
+                    reason=(f"root {req.root} out of range [0, {n}) "
+                            f"for graph {req.graph!r}"))
         demand = self._demand(req)
         budget = self._budget(req.tenant, demand)
         pending = self._inflight_demand.get(req.tenant, 0)
         if budget is not None and pending + demand > budget:
             ts.rejected += 1
+            if demand > budget:
+                return Response(
+                    req.req_id, req.tenant, STATUS_REJECTED,
+                    retriable=False,
+                    reason=(f"demand {demand} exceeds tenant budget "
+                            f"{budget} tasks/round — can never be "
+                            f"admitted; resubmission is futile"))
             return Response(
                 req.req_id, req.tenant, STATUS_REJECTED, retriable=True,
                 reason=(f"tenant budget {budget} tasks/round: "

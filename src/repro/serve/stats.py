@@ -27,7 +27,7 @@ def _quantile(xs: List[float], q: float) -> float:
 class TenantStats:
     submitted: int = 0
     served: int = 0
-    rejected: int = 0                 # admission-control, retriable
+    rejected: int = 0                 # admission-control rejections
     failed: int = 0
     # launch-level attribution: drops/messages/rounds of every fused
     # launch this tenant rode (columns share one NoC, so per-column

@@ -155,7 +155,12 @@ def _multi_root_init(g, params):
     n = g.n // len(roots)
     dist = np.full(g.n, np.inf)
     for t, root in enumerate(roots):
-        dist[t * n + int(root)] = 0.0
+        r = int(root)
+        if not 0 <= r < n:
+            # a bad root must never wrap into another tenant's column
+            raise ValueError(
+                f"root {root} out of range [0, {n}) for tenant column {t}")
+        dist[t * n + r] = 0.0
     return (dist,), (np.inf,)
 
 

@@ -14,7 +14,8 @@ Part B (subprocess, 8 fake host devices) — the serving contract:
   ``cache_stats``/``_cached`` serving-load coverage);
 * admission control: an undersized per-tenant budget rejects with a
   retriable status (never a silent drop), accounting balances, and a
-  drained tenant's retry is admitted;
+  drained tenant's retry is admitted; a request whose demand alone
+  exceeds its budget is rejected NON-retriable (no futile retry loop);
 * undersized *launch* queues produce NoC drops that are attributed to
   responses and stats, never swallowed;
 * the MoE lane serves batched token blocks through one warm jitted
@@ -90,6 +91,121 @@ def test_batched_program_registry():
     assert batched_program("sssp").reduce_op == "min"
     with pytest.raises(KeyError):
         batched_program("pagerank")   # add-reduce: no exact batching
+
+
+def test_tenant_graph_memo_purges_dead_graphs():
+    """The memo must not pin garbage-collected base graphs (unbounded
+    growth) — a dead referent's entry disappears with the graph."""
+    import gc
+    from repro.serve import batching
+    from repro.sparse import datasets
+    n0 = len(batching._TENANT_GRAPHS)
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=4)
+    tg = batching.tenant_graph(g, 2)
+    assert batching.tenant_graph(g, 2) is tg        # memo hit while alive
+    assert len(batching._TENANT_GRAPHS) == n0 + 1
+    del g
+    gc.collect()
+    assert len(batching._TENANT_GRAPHS) == n0
+
+
+def test_tenant_graph_memo_not_fooled_by_id_reuse():
+    """Regression: the memo keyed (id(g), T) alone — once a base CSR was
+    collected and a new one landed at the same id, the stale expansion of
+    a DIFFERENT graph came back. Simulate the id collision directly: a
+    stale entry under g's id whose recorded referent is dead must be
+    recomputed, not served."""
+    import weakref
+    from repro.serve import batching
+    from repro.sparse import datasets
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=5)
+    other = datasets.erdos_renyi(8, avg_degree=2, seed=6)
+    stale = batching.tenant_graph(other, 2)
+
+    class _Dead:
+        pass
+
+    d = _Dead()
+    batching._TENANT_GRAPHS[(id(g), 2)] = (weakref.ref(d), stale)
+    del d
+    tg = batching.tenant_graph(g, 2)
+    assert tg is not stale
+    assert tg.n == g.n * 2 and tg.nnz == g.nnz * 2
+
+
+class _FakeMesh:
+    """Just enough mesh for submit-time admission tests (no launches)."""
+    devices = np.zeros(4)
+
+
+def test_submit_rejects_out_of_range_root():
+    """Regression: an unvalidated root r >= n (or negative) wraps into
+    ANOTHER tenant's column in _multi_root_init, silently corrupting that
+    tenant's result. submit() must fail such requests loudly."""
+    from repro.serve import ProgramServer, Request, STATUS_FAILED
+    from repro.sparse import datasets
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=7)
+    srv = ProgramServer(_FakeMesh(), {"g": g}, batch_width=2)
+    for bad in (g.n, g.n + 5, -1):
+        resp = srv.submit(Request(0, "acme", "bfs", "g", root=bad))
+        assert resp is not None and resp.status == STATUS_FAILED
+        assert "root" in resp.reason and not resp.retriable
+    assert srv.queue_depth == 0
+    srv.stats.verify()                  # failed roots are all accounted
+    assert srv.stats.tenant("acme").failed == 3
+    # boundary roots are still admitted
+    srv2 = ProgramServer(_FakeMesh(), {"g": g}, batch_width=2)
+    assert srv2.submit(Request(1, "acme", "bfs", "g", root=g.n - 1)) is None
+    assert srv2.submit(Request(2, "bee", "bfs", "g", root=0)) is None
+    assert srv2.queue_depth == 2
+
+
+def test_multi_root_init_rejects_out_of_range_root():
+    """Defense in depth: the init rule itself refuses roots that would
+    seed distance 0 outside the request's own tenant column."""
+    from repro.serve.batching import tenant_graph
+    from repro.sparse import datasets
+    from repro.sparse.jax_apps import BATCHED_BFS
+    g = datasets.erdos_renyi(16, avg_degree=3, seed=8)
+    tg = tenant_graph(g, 2)
+    (dist,), _ = BATCHED_BFS.init(tg, {"roots": (0, g.n - 1)})
+    assert dist[0] == 0.0 and dist[2 * g.n - 1] == 0.0
+    for bad in (g.n, -1):
+        with pytest.raises(ValueError, match="out of range"):
+            BATCHED_BFS.init(tg, {"roots": (0, bad)})
+
+
+def test_submit_moe_without_service_fails_accounted():
+    """Regression: a 'moe' request on a server with no MoEService raised
+    ValueError out of submit(), leaving the request counted as submitted
+    but never served/rejected/failed — breaking the stats ledger."""
+    from repro.serve import ProgramServer, Request, STATUS_FAILED
+    srv = ProgramServer(_FakeMesh(), {})
+    resp = srv.submit(Request(0, "acme", "moe",
+                              payload=np.zeros((16, 8), np.float32)))
+    assert resp is not None and resp.status == STATUS_FAILED
+    assert "MoEService" in resp.reason and not resp.retriable
+    srv.stats.verify()
+    assert srv.stats.tenant("acme").failed == 1
+
+
+def test_oversized_demand_rejected_nonretriable():
+    """Regression: a request whose demand alone exceeds the tenant budget
+    was rejected retriable=True with a 'resubmit after drain' reason, so
+    a well-behaved retrying client looped forever."""
+    from repro.core.queues import QueueConfig
+    from repro.serve import ProgramServer, Request, STATUS_REJECTED
+    from repro.sparse import datasets
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=9)
+    srv = ProgramServer(
+        _FakeMesh(), {"g": g}, batch_width=2,
+        default_queues=QueueConfig.from_cap(2, "serve"))   # budget 8 << nnz
+    resp = srv.submit(Request(0, "acme", "bfs", "g", root=0))
+    assert resp is not None and resp.status == STATUS_REJECTED
+    assert resp.retriable is False
+    assert "never" in resp.reason
+    srv.stats.verify()
+    assert srv.stats.tenant("acme").rejected == 1
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +401,9 @@ def test_admission_rejects_retriably_not_silently(results):
     a = results["admission"]
     assert a["first_admitted"]
     assert a["over_budget"] == {"status": "rejected", "retriable": True}
-    assert a["tiny_budget"] == {"status": "rejected", "retriable": True}
+    # globex's budget can't fit the request even when idle: rejecting it
+    # retriable would send a well-behaved client into a futile retry loop
+    assert a["tiny_budget"] == {"status": "rejected", "retriable": False}
     assert a["retry_after_drain_admitted"]
     assert a["served"] == ["ok", "ok"]
     # the ledger balances: every submit is served or rejected
