@@ -297,6 +297,133 @@ def owner_route_hier(vals, slot_ids, owner, valid, n_intra, intra_axis,
     return recv_slot, v2[:, 0], drop1 + drop2
 
 
+# ---------------------------------------------------------------------------
+# split-phase rounds (the pipelined execution shape's communication edge)
+# ---------------------------------------------------------------------------
+#
+# ``round_mode="pipelined"`` in :func:`repro.sparse.program.run_program`
+# rotates the round loop: the collective for round k is LAUNCHED at the
+# tail of loop iteration k-1 and its receive-reduce is consumed at the
+# head of iteration k — the in-flight wire buffer is the loop carry (the
+# double buffer). The helpers below split :func:`owner_route` /
+# :func:`owner_route_hier` into that start/finish pair, and optionally
+# ride a broadcast int32 *signal* (the while-loop's global frontier
+# count) on the same collective as one extra row per destination bucket,
+# so the pipelined loop needs NO per-round ``psum`` at all: one fused
+# collective per round, where the lockstep shape issues four (a2a +
+# message/drop/convergence psums).
+
+
+def _a2a_with_signal(packed, n_blocks, signal, axis):
+    """Tiled all_to_all of a packed wire array [n_blocks*rows, C] with one
+    broadcast signal row appended per destination block.
+
+    Every peer receives the sender's int32 ``signal`` (bitcast into
+    column 0 of the extra row); the task rows' bytes are untouched — the
+    exchanged blocks are simply [rows+1, C] instead of [rows, C], so the
+    stripped receive buffer is value-identical to the plain collective.
+    Returns ``(recv [n_blocks*rows, C], gsignal)`` where ``gsignal`` is
+    the sum of all senders' signals — a global reduction ridden on the
+    collective the round pays anyway (+1/rows wire overhead).
+    """
+    total, c = packed.shape
+    rows = total // n_blocks
+    sig = jax.lax.bitcast_convert_type(
+        jnp.asarray(signal, jnp.int32), jnp.float32)
+    sig_row = jnp.zeros((n_blocks, 1, c), packed.dtype).at[:, 0, 0].set(sig)
+    wire = jnp.concatenate([packed.reshape(n_blocks, rows, c), sig_row],
+                           axis=1).reshape(n_blocks * (rows + 1), c)
+    recv = noc_all_to_all(wire, axis).reshape(n_blocks, rows + 1, c)
+    gsignal = jnp.sum(jax.lax.bitcast_convert_type(recv[:, rows, 0],
+                                                   jnp.int32))
+    return recv[:, :rows].reshape(n_blocks * rows, c), gsignal
+
+
+def owner_route_start(vals, slot_ids, owner, valid, n_shards, cap, axis,
+                      signal, impl=None):
+    """Produce half of one flat NoC round: bucket + pack + the fused
+    collective (with ``signal`` ridden along, see :func:`_a2a_with_signal`).
+
+    Returns ``(recv_wire, meta, n_drop_local, gsignal)``; hand
+    ``(recv_wire, meta)`` to :func:`owner_route_finish` — possibly across
+    a loop-carry boundary — for the exact :func:`owner_route` receive
+    values. ``meta`` is static (shape/dtype bookkeeping), so only the
+    wire buffer itself is carried.
+    """
+    xb, (slot_b,), _, n_drop = bucket(vals[:, None], owner, valid,
+                                      [slot_ids], n_shards, cap, impl=impl)
+    packed, meta = pack_wire(xb, [slot_b])
+    recv, gsignal = _a2a_with_signal(packed, n_shards, signal, axis)
+    return recv, meta, n_drop, gsignal
+
+
+def owner_route_finish(recv_wire, meta):
+    """Consume half: unpack the carried wire buffer into
+    ``(recv_slot, recv_val)`` — feed :func:`reduce_received` to fold the
+    receive-reduce into the communication edge."""
+    recv_vals, (recv_slot,) = unpack_wire(recv_wire, meta)
+    return recv_slot, recv_vals[:, 0]
+
+
+def owner_route_hier_start(vals, slot_ids, owner, valid, n_intra,
+                           intra_axis, n_pods, pod_axis, cap1, cap2,
+                           signal, impl=None):
+    """Produce half of one pod/portal round (both stages complete here —
+    stage-2 bucketing needs stage-1's receive, so the die-NoC edge is the
+    one the pipelined loop carries). The signal crosses both stages:
+    stage 1 sums it pod-locally at every portal, stage 2 sums the pod
+    totals, so ``gsignal`` is the same global sum the flat path yields.
+    Returns ``(recv_wire2, meta2, n_drop_local, gsignal)``."""
+    e_coord = owner % n_intra
+    p_coord = owner // n_intra
+    xb, (pc_b, slot_b), _, drop1 = bucket(vals[:, None], e_coord, valid,
+                                          [p_coord, slot_ids], n_intra, cap1,
+                                          impl=impl)
+    packed1, meta1 = pack_wire(xb, [pc_b, slot_b])
+    recv1, sig1 = _a2a_with_signal(packed1, n_intra, signal, intra_axis)
+    v1, (pc1, slot1) = unpack_wire(recv1, meta1)
+    valid1 = pc1 >= 0
+    xb2, (slot2_b,), _, drop2 = bucket(v1, jnp.maximum(pc1, 0), valid1,
+                                       [slot1], n_pods, cap2, impl=impl)
+    packed2, meta2 = pack_wire(xb2, [slot2_b])
+    recv2, gsignal = _a2a_with_signal(packed2, n_pods, sig1, pod_axis)
+    return recv2, meta2, drop1 + drop2, gsignal
+
+
+def local_route_reduce(vals, slot_ids, dest, valid, n_buckets, cap, n_local,
+                       op, impl=None):
+    """One whole round with a LOCAL communication edge: when producer and
+    consumer are the same shard (``n_dev == 1`` launches; the per-shard
+    round the bench simulates), folding the receive-reduce into admission
+    eliminates the wire buffer — rank, capacity-test, and segment-reduce
+    straight off the task stream, never materializing the
+    ``[n_buckets*cap]`` bucket array or re-reading it at the receiver.
+
+    Valid only for order-insensitive reduces (``min`` / ``store``): the
+    kept set is identical to ``bucket`` + :func:`reduce_received` (same
+    first-``cap``-per-channel rule, same rank ``impl``) and min/max are
+    exact in f32, so the result and drop count are bit-identical to the
+    two-pass path. ``add`` must keep the two-pass path — its summation
+    order would differ. Returns ``(y [n_local], n_drop)``.
+    """
+    if op not in ("min", "store"):
+        raise ValueError(f"local_route_reduce needs an order-insensitive "
+                         f"reduce, got {op!r}")
+    pos = positions_by_dest(dest, valid, n_buckets, impl=impl)
+    keep = valid & (pos < cap)
+    n_drop = jnp.sum(valid & ~keep)
+    seg = jnp.where(keep, slot_ids, n_local)
+    if op == "min":
+        y = jax.ops.segment_min(jnp.where(keep, vals, jnp.inf), seg,
+                                num_segments=n_local + 1)[:n_local]
+        y = jnp.where(jnp.isfinite(y), y, jnp.inf)
+    else:                                                # "store" (max)
+        y = jax.ops.segment_max(jnp.where(keep, vals, -jnp.inf), seg,
+                                num_segments=n_local + 1)[:n_local]
+        y = jnp.where(jnp.isfinite(y), y, 0.0)
+    return y, n_drop
+
+
 def reduce_received(recv_slot, recv_val, n_local, op, impl=None):
     """Apply received tasks at the owner: segment add/min/store into local
     slots.

@@ -1,18 +1,22 @@
 """``python -m repro.dse.route_compare OLD.json NEW.json`` — routing
 hot-path trajectory gate (sibling of :mod:`repro.dse.compare`, for the
-wall-clock ``dcra-route-bench/v1`` artifact ``BENCH_route.json``).
+wall-clock ``dcra-route-bench/v2`` artifact ``BENCH_route.json``).
 
 Absolute milliseconds do not transfer across machines (the committed
 baseline is produced on a dev box, CI runs on shared runners), so the
-gate compares what IS machine-portable: each impl's **speedup vs the
-onehot baseline measured in the same run**. A cell+impl whose relative
-speedup falls more than ``--tol`` (default 20%) below the committed
-baseline fails the build — the fast path got slower relative to the
-legacy path, which is a code regression, not runner noise.
+gate compares what IS machine-portable — the within-run ratios:
 
-Cells are matched by (n, s); a cell or impl present in the baseline but
-missing from the new bench is a failure (silent coverage loss); new
-cells are informational.
+* op-level ``cells``: each impl's **speedup vs the onehot baseline
+  measured in the same run**;
+* round-level ``round_cells``: each impl's **pipelined-vs-lockstep round
+  speedup** — the headline win of ``round_mode="pipelined"``. If the
+  fused round shape stops beating the two-pass shape, that is a code
+  regression, not runner noise.
+
+A cell+impl whose ratio falls more than ``--tol`` (default 20%) below
+the committed baseline fails the build. Cells are matched by (n, s); a
+cell or impl present in the baseline but missing from the new bench is a
+failure (silent coverage loss); new cells are informational.
 
 Exit codes: 0 ok; 1 bad input; 2 regression.
 """
@@ -23,11 +27,41 @@ import json
 import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
-SCHEMA = "dcra-route-bench/v1"
+SCHEMA = "dcra-route-bench/v2"
+# schemas this gate still understands as a *baseline* — a v1 baseline
+# (no round_cells) gates only the op-level ratios until regenerated
+COMPAT_SCHEMAS = ("dcra-route-bench/v1", SCHEMA)
 
 
-def _cells(bench: Dict) -> Dict[Tuple[int, int], Dict]:
-    return {(c["n"], c["s"]): c for c in bench.get("cells", [])}
+def _cells(bench: Dict, kind: str) -> Dict[Tuple[int, int], Dict]:
+    return {(c["n"], c["s"]): c for c in bench.get(kind, [])}
+
+
+def _gate_ratios(co: Dict, cn: Dict, field: str, label: str, tol: float,
+                 failures: List[str], notes: List[str]) -> None:
+    """Gate one ratio dict (impl -> ratio) across matched (n, s) cells."""
+    for key in sorted(co):
+        if key not in cn:
+            failures.append(f"{label} cell N={key[0]} S={key[1]}: missing "
+                            f"from new bench")
+            continue
+        so = co[key].get(field, {})
+        sn = cn[key].get(field, {})
+        for impl in sorted(so):
+            if impl not in sn:
+                failures.append(f"{label} cell N={key[0]} S={key[1]} "
+                                f"{impl}: missing from new bench")
+                continue
+            line = (f"{label} N={key[0]} S={key[1]} {impl}: "
+                    f"{so[impl]:.2f}x -> {sn[impl]:.2f}x")
+            if sn[impl] < so[impl] * (1.0 - tol):
+                failures.append(f"{line}  REGRESSED beyond tol={tol:.0%}")
+            else:
+                notes.append(line)
+    born = sorted(set(cn) - set(co))
+    if born:
+        notes.append(f"{len(born)} new {label} cell(s): {born} "
+                     f"(informational)")
 
 
 def compare(old: Dict, new: Dict, tol: float = 0.2
@@ -35,7 +69,7 @@ def compare(old: Dict, new: Dict, tol: float = 0.2
     """Returns (failures, notes); empty failures == trajectory ok."""
     failures: List[str] = []
     notes: List[str] = []
-    co, cn = _cells(old), _cells(new)
+    co, cn = _cells(old, "cells"), _cells(new, "cells")
     if not co:
         return ["old bench has no cells"], notes
     if not cn:
@@ -47,27 +81,16 @@ def compare(old: Dict, new: Dict, tol: float = 0.2
             return [f"{field} mismatch: baseline {old.get(field)!r} vs "
                     f"new {new.get(field)!r} — regenerate the committed "
                     f"baseline on the comparison backend"], notes
-    for key in sorted(co):
-        if key not in cn:
-            failures.append(f"cell N={key[0]} S={key[1]}: missing from "
-                            f"new bench")
-            continue
-        so = co[key].get("speedup_vs_onehot", {})
-        sn = cn[key].get("speedup_vs_onehot", {})
-        for impl in sorted(so):
-            if impl not in sn:
-                failures.append(f"cell N={key[0]} S={key[1]} {impl}: "
-                                f"missing from new bench")
-                continue
-            line = (f"N={key[0]} S={key[1]} {impl}: "
-                    f"{so[impl]:.2f}x -> {sn[impl]:.2f}x vs onehot")
-            if sn[impl] < so[impl] * (1.0 - tol):
-                failures.append(f"{line}  REGRESSED beyond tol={tol:.0%}")
-            else:
-                notes.append(line)
-    born = sorted(set(cn) - set(co))
-    if born:
-        notes.append(f"{len(born)} new cell(s): {born} (informational)")
+    _gate_ratios(co, cn, "speedup_vs_onehot", "op", tol, failures, notes)
+    ro = _cells(old, "round_cells")
+    rn = _cells(new, "round_cells")
+    if ro and not rn:
+        failures.append("baseline has round_cells but new bench has none")
+    elif not ro and rn:
+        notes.append("baseline has no round_cells (v1?) — round-level "
+                     "ratios reported but not gated; regenerate the "
+                     "baseline to gate them")
+    _gate_ratios(ro, rn, "round_speedup", "round", tol, failures, notes)
     return failures, notes
 
 
@@ -88,9 +111,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"[dse.route_compare] bad input: {e}", file=sys.stderr)
         return 1
     for name, bench in (("old", old), ("new", new)):
-        if bench.get("schema") != SCHEMA:
+        allowed = COMPAT_SCHEMAS if name == "old" else (SCHEMA,)
+        if bench.get("schema") not in allowed:
             print(f"[dse.route_compare] bad input: {name} schema "
-                  f"{bench.get('schema')!r} != {SCHEMA!r}", file=sys.stderr)
+                  f"{bench.get('schema')!r} not in {allowed!r}",
+                  file=sys.stderr)
             return 1
     failures, notes = compare(old, new, tol=args.tol)
     for line in notes:

@@ -12,14 +12,16 @@ through :class:`~repro.core.queues.QueueConfig` per-tenant round budgets
 exports per-tenant serving stats (queue depth, cache hit rate, drops,
 p50/p99 round latency).
 """
+from ..sparse.options import LaunchOptions
 from .batching import (TenantBatch, batched_program, split_tenant_states,
                        tenant_graph)
-from .engine import (MoEService, ProgramServer, Request, Response,
-                     STATUS_FAILED, STATUS_OK, STATUS_REJECTED)
+from .engine import (ADMISSION_TASK, MoEService, ProgramServer, Request,
+                     Response, STATUS_FAILED, STATUS_OK, STATUS_REJECTED)
 from .stats import ServingStats, TenantStats
 
 __all__ = [
-    "MoEService", "ProgramServer", "Request", "Response", "ServingStats",
-    "STATUS_FAILED", "STATUS_OK", "STATUS_REJECTED", "TenantBatch",
-    "TenantStats", "batched_program", "split_tenant_states", "tenant_graph",
+    "ADMISSION_TASK", "LaunchOptions", "MoEService", "ProgramServer",
+    "Request", "Response", "ServingStats", "STATUS_FAILED", "STATUS_OK",
+    "STATUS_REJECTED", "TenantBatch", "TenantStats", "batched_program",
+    "split_tenant_states", "tenant_graph",
 ]

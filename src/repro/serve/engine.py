@@ -39,6 +39,7 @@ import numpy as np
 from ..core.queues import QueueConfig
 from ..sparse import program as program_mod
 from ..sparse.csr import CSR
+from ..sparse.options import LaunchOptions
 from ..sparse.program import prewarm_program, run_program
 from .batching import (BATCHED_PROGRAMS, TenantBatch, batched_program,
                        split_tenant_states, tenant_graph)
@@ -69,8 +70,10 @@ class Request:
     params: Mapping = field(default_factory=dict)
 
 
-@dataclass
+@dataclass(frozen=True)
 class Response:
+    """One request's outcome — immutable once issued (like
+    :class:`Request`, part of the stable ``repro.serve`` surface)."""
     req_id: int
     tenant: str
     status: str                        # STATUS_OK | _REJECTED | _FAILED
@@ -89,9 +92,31 @@ class ProgramServer:
 
     ``tenant_queues`` maps tenant -> :class:`QueueConfig` admission
     budget (``default_queues`` covers the rest; ``None`` = unbounded
-    admission). ``launch_queues`` sizes the actual NoC launches — the
-    default factor-4 sizing is drop-free for the serving graphs, which
-    is what keeps batched results bit-identical to standalone runs.
+    admission). ``options`` is the :class:`LaunchOptions` default applied
+    to EVERY launch the server issues (pre-warm included) — queue sizing,
+    ``route_impl``, ``round_mode="pipelined"``, all of it; the legacy
+    ``axis=`` / ``launch_queues=`` kwargs keep working when ``options``
+    is not given (mixing the two raises). The default factor-4 sizing is
+    drop-free for the serving graphs, which is what keeps batched results
+    bit-identical to standalone runs.
+
+    **The serving-loop contract** (one place, the three methods below are
+    thin entries into it):
+
+    * :meth:`step` serves exactly ONE fused batch — it pops up to
+      ``batch_width`` queued requests of the head-of-line (program,
+      graph) class (one request per tenant), launches them as a single
+      padded tenant-column ``run_program`` (or one MoE dispatch), and
+      returns that batch's responses, ``[]`` when the queue is idle. A
+      failed launch never takes the server down: every rider gets a
+      non-retriable :data:`STATUS_FAILED` response.
+    * :meth:`drain` calls :meth:`step` until the queue is empty and
+      concatenates the responses (arrival order across batches).
+    * :meth:`run` is submit-then-drain for a whole request list:
+      admission rejections are collected (never dropped), the queue is
+      drained, and ALL responses come back sorted by ``req_id``.
+
+    Responses are one-to-one with submitted requests in every path.
     """
 
     def __init__(self, mesh, graphs: Dict[str, CSR], *, axis: str = "data",
@@ -100,14 +125,24 @@ class ProgramServer:
                  default_queues: Optional[QueueConfig] = None,
                  launch_queues: Optional[QueueConfig] = None,
                  max_rounds: Optional[int] = None,
-                 moe: Optional["MoEService"] = None):
+                 moe: Optional["MoEService"] = None,
+                 options: Optional[LaunchOptions] = None):
+        if options is not None:
+            if axis != "data" or launch_queues is not None:
+                raise ValueError("options= conflicts with explicit axis=/"
+                                 "launch_queues=: fold them into the "
+                                 "LaunchOptions")
+            self.options = options.resolve()
+        else:
+            self.options = LaunchOptions(axis=axis,
+                                         queues=launch_queues).resolve()
         self.mesh = mesh
-        self.axis = axis
+        self.axis = self.options.axis
         self.graphs = dict(graphs)
         self.batch_width = int(batch_width)
         self.tenant_queues = dict(tenant_queues or {})
         self.default_queues = default_queues
-        self.launch_queues = launch_queues
+        self.launch_queues = self.options.queues
         self.max_rounds = max_rounds
         self.moe = moe
         self.stats = ServingStats()
@@ -213,8 +248,7 @@ class ProgramServer:
             for gname in (graphs if graphs is not None else self.graphs):
                 tg = tenant_graph(self.graphs[gname], self.batch_width)
                 keys = prewarm_program(
-                    prog, tg, self.mesh, axis=self.axis,
-                    queues=self.launch_queues,
+                    prog, tg, self.mesh, options=self.options,
                     max_rounds=self.max_rounds,
                     params={"roots": (0,) * self.batch_width})
                 out[(name, gname)] = keys
@@ -260,7 +294,8 @@ class ProgramServer:
         return resp
 
     def step(self) -> List[Response]:
-        """Serve one fused batch off the queue (empty list when idle)."""
+        """Serve ONE fused batch (see the class docstring's serving-loop
+        contract); ``[]`` when idle."""
         if not self._queue:
             return []
         batch_reqs = self._next_batch()
@@ -282,8 +317,8 @@ class ProgramServer:
         t0 = time.perf_counter()
         try:
             (state,), app_stats = run_program(
-                prog, tg, self.mesh, axis=self.axis,
-                queues=self.launch_queues, max_rounds=self.max_rounds,
+                prog, tg, self.mesh, options=self.options,
+                max_rounds=self.max_rounds,
                 params={"roots": batch.roots})
         except Exception as e:  # noqa: BLE001 — a failed launch must not
             # take the server down; every rider gets a non-retriable
@@ -333,14 +368,15 @@ class ProgramServer:
             for i, r in enumerate(reqs)]
 
     def drain(self) -> List[Response]:
+        """:meth:`step` until idle (see the class docstring)."""
         out: List[Response] = []
         while self._queue:
             out.extend(self.step())
         return out
 
     def run(self, requests: List[Request]) -> List[Response]:
-        """Convenience: submit a whole stream, drain, return responses in
-        ``req_id`` order (rejections included — nothing is dropped)."""
+        """Submit a whole stream, drain, return responses in ``req_id``
+        order (see the class docstring)."""
         responses: List[Response] = []
         for req in requests:
             rej = self.submit(req)
@@ -363,7 +399,7 @@ class MoEService:
     the TaskProgram compile cache's no-re-trace assertion.
     """
 
-    def __init__(self, cfg, params, info, batch: int = 4, seq: int = 16):
+    def __init__(self, cfg, params, info, *, batch: int = 4, seq: int = 16):
         if cfg.moe is None:
             raise ValueError("MoEService needs a config with cfg.moe set")
         self.cfg, self.params, self.info = cfg, params, info

@@ -7,13 +7,19 @@ _JAX_APPS = ("AppStats", "PROGRAMS", "TaskProgram", "dcra_bfs",
              "dcra_scatter", "dcra_spmv", "dcra_sssp", "dcra_wcc",
              "histogram_task_stream", "run_program", "spmv_task_stream")
 
+# launch configuration (numpy-only module — no jax import)
+_OPTIONS = ("LaunchOptions", "resolve_options")
+
 
 def __getattr__(name):
     if name in _JAX_APPS:
         from . import jax_apps
         return getattr(jax_apps, name)
+    if name in _OPTIONS:
+        from . import options
+        return getattr(options, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(list(globals()) + list(_JAX_APPS))
+    return sorted(list(globals()) + list(_JAX_APPS) + list(_OPTIONS))

@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from .csr import CSR
+from .options import LaunchOptions
 # dcra_scatter / from_owner_layout are re-exported: tests and benchmarks
 # address the one-round scatter and the layout inverse through this module
 from .program import (AppStats, TaskProgram, dcra_scatter,  # noqa: F401
@@ -36,7 +37,7 @@ from .program import (AppStats, TaskProgram, dcra_scatter,  # noqa: F401
 # single-device (edge-parallel) reference executables
 # ---------------------------------------------------------------------------
 
-def spmv_jnp(rows, cols, vals, x, n):
+def spmv_jnp(rows, cols, vals, x, n):  # noqa: PLR0917
     return jax.ops.segment_sum(vals * x[cols], rows, num_segments=n)
 
 
@@ -45,7 +46,8 @@ def histogram_jnp(elements, n_bins):
                                num_segments=n_bins)
 
 
-def bfs_jnp(rows, cols, n, root, max_levels: Optional[int] = None):
+def bfs_jnp(rows, cols, n, root,  # noqa: PLR0917
+             max_levels: Optional[int] = None):
     """Edge-parallel BFS: one scatter-min round per level."""
     jnp = jax.numpy
     dist = jnp.full((n,), jnp.inf).at[root].set(0.0)
@@ -295,105 +297,136 @@ PROGRAMS = {p.name: p for p in (BFS, SSSP, WCC, PAGERANK, SPMV, HISTOGRAM,
 # public app entry points (thin wrappers over run_program)
 # ---------------------------------------------------------------------------
 
-def dcra_spmv(g: CSR, x: np.ndarray, mesh, axis="data",
+def dcra_spmv(g: CSR, x: np.ndarray, mesh, *,
+              options: Optional[LaunchOptions] = None, axis="data",
               capacity_factor: Optional[float] = None, seed: int = 0,
               pod_axis=None, cap: Optional[int] = None, config=None,
-              objective="teps", route_impl: Optional[str] = None):
+              objective="teps", route_impl: Optional[str] = None,
+              round_mode: Optional[str] = None):
     """Distributed y = A @ x via one owner-routed round.
 
     ``config="auto"`` resolves pod/portal routing and the per-task IQ
     sizing from the tracked Pareto frontier (see
     :mod:`repro.dse.autoconfig`) instead of the kwargs (combining the
-    two raises). ``capacity_factor`` defaults to 2.0.
+    two raises). ``capacity_factor`` defaults to 2.0. ``options=`` takes
+    a :class:`LaunchOptions` in place of the legacy launch kwargs.
     """
-    y, stats = run_program(SPMV, (g, x), mesh, dataset=g, axis=axis,
-                           pod_axis=pod_axis, cap=cap,
+    y, stats = run_program(SPMV, (g, x), mesh, dataset=g, options=options,
+                           axis=axis, pod_axis=pod_axis, cap=cap,
                            capacity_factor=capacity_factor, config=config,
                            objective=objective, seed=seed,
-                           route_impl=route_impl)
+                           route_impl=route_impl, round_mode=round_mode)
     return y, stats.total_drops
 
 
-def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, axis="data",
+def dcra_histogram(elements: np.ndarray, n_bins: int, mesh, *,
+                   options: Optional[LaunchOptions] = None, axis="data",
                    capacity_factor: Optional[float] = None, pod_axis=None,
                    cap: Optional[int] = None, config=None,
-                   objective="teps", route_impl: Optional[str] = None):
+                   objective="teps", route_impl: Optional[str] = None,
+                   round_mode: Optional[str] = None):
     y, stats = run_program(HISTOGRAM, (elements, n_bins), mesh,
-                           dataset=elements, axis=axis, pod_axis=pod_axis,
-                           cap=cap, capacity_factor=capacity_factor,
-                           config=config, objective=objective,
-                           route_impl=route_impl)
+                           dataset=elements, options=options, axis=axis,
+                           pod_axis=pod_axis, cap=cap,
+                           capacity_factor=capacity_factor, config=config,
+                           objective=objective, route_impl=route_impl,
+                           round_mode=round_mode)
     return y, stats.total_drops
 
 
-def dcra_bfs(g: CSR, root: int, mesh, axis="data",
+def dcra_bfs(g: CSR, root: int, mesh, *,
+             options: Optional[LaunchOptions] = None, axis="data",
              capacity_factor: Optional[float] = None, max_rounds: int = 128,
              seed: int = 0, config=None, objective="teps",
-             cap: Optional[int] = None, pod_axis=None
+             cap: Optional[int] = None, pod_axis=None,
+             route_impl: Optional[str] = None,
+             round_mode: Optional[str] = None
              ) -> Tuple[np.ndarray, AppStats]:
     """Distributed BFS: hop count from root, -1 if unreachable.
 
     ``config="auto"`` picks the deployment (grid, topology, IQ sizing)
     from the tracked Pareto frontier for this graph + objective;
     ``capacity_factor`` (default 4.0) is the manual alternative —
-    passing both raises.
+    passing both raises. ``options=`` takes a :class:`LaunchOptions` in
+    place of the legacy launch kwargs; ``route_impl`` / ``round_mode``
+    thread through to :func:`run_program` unchanged.
     """
-    (d,), stats = run_program(BFS, g, mesh, axis=axis, pod_axis=pod_axis,
-                              cap=cap, capacity_factor=capacity_factor,
+    (d,), stats = run_program(BFS, g, mesh, options=options, axis=axis,
+                              pod_axis=pod_axis, cap=cap,
+                              capacity_factor=capacity_factor,
                               config=config, objective=objective,
                               params={"root": int(root)},
-                              max_rounds=max_rounds, seed=seed)
+                              max_rounds=max_rounds, seed=seed,
+                              route_impl=route_impl, round_mode=round_mode)
     return np.where(np.isfinite(d), d, -1).astype(np.int64), stats
 
 
-def dcra_sssp(g: CSR, root: int, mesh, axis="data",
+def dcra_sssp(g: CSR, root: int, mesh, *,
+              options: Optional[LaunchOptions] = None, axis="data",
               capacity_factor: Optional[float] = None, max_rounds: int = 256,
               seed: int = 0, config=None, objective="teps",
-              cap: Optional[int] = None, pod_axis=None
+              cap: Optional[int] = None, pod_axis=None,
+              route_impl: Optional[str] = None,
+              round_mode: Optional[str] = None
               ) -> Tuple[np.ndarray, AppStats]:
     """Distributed SSSP (frontier Bellman-Ford): inf if unreachable."""
-    (d,), stats = run_program(SSSP, g, mesh, axis=axis, pod_axis=pod_axis,
-                              cap=cap, capacity_factor=capacity_factor,
+    (d,), stats = run_program(SSSP, g, mesh, options=options, axis=axis,
+                              pod_axis=pod_axis, cap=cap,
+                              capacity_factor=capacity_factor,
                               config=config, objective=objective,
                               params={"root": int(root)},
-                              max_rounds=max_rounds, seed=seed)
+                              max_rounds=max_rounds, seed=seed,
+                              route_impl=route_impl, round_mode=round_mode)
     return d.astype(np.float64), stats
 
 
-def dcra_wcc(g: CSR, mesh, axis="data",
+def dcra_wcc(g: CSR, mesh, *,
+             options: Optional[LaunchOptions] = None, axis="data",
              capacity_factor: Optional[float] = None,
              max_rounds: int = 128, seed: int = 0, config=None,
-             objective="teps", cap: Optional[int] = None, pod_axis=None
+             objective="teps", cap: Optional[int] = None, pod_axis=None,
+             route_impl: Optional[str] = None,
+             round_mode: Optional[str] = None
              ) -> Tuple[np.ndarray, AppStats]:
     """Distributed WCC via min-label propagation over both edge directions."""
     if g.n > (1 << 24):
         # labels ride the f32 NoC payload; ids above 2^24 would collide
         raise ValueError(f"dcra_wcc supports up to 2^24 vertices, got {g.n}")
-    (lab,), stats = run_program(WCC, g, mesh, axis=axis, pod_axis=pod_axis,
-                                cap=cap, capacity_factor=capacity_factor,
+    (lab,), stats = run_program(WCC, g, mesh, options=options, axis=axis,
+                                pod_axis=pod_axis, cap=cap,
+                                capacity_factor=capacity_factor,
                                 config=config, objective=objective,
-                                max_rounds=max_rounds, seed=seed)
+                                max_rounds=max_rounds, seed=seed,
+                                route_impl=route_impl, round_mode=round_mode)
     return lab.astype(np.int64), stats
 
 
-def dcra_pagerank(g: CSR, mesh, damping: float = 0.85, iters: int = 20,
-                  axis="data", capacity_factor: Optional[float] = None,
+def dcra_pagerank(g: CSR, mesh, damping: float = 0.85, iters: int = 20, *,
+                  options: Optional[LaunchOptions] = None, axis="data",
+                  capacity_factor: Optional[float] = None,
                   seed: int = 0, config=None, objective="teps",
-                  cap: Optional[int] = None, pod_axis=None
+                  cap: Optional[int] = None, pod_axis=None,
+                  route_impl: Optional[str] = None,
+                  round_mode: Optional[str] = None
                   ) -> Tuple[np.ndarray, AppStats]:
     """Distributed PageRank: ``iters`` owner-routed epochs (fori_loop),
     dangling mass redistributed uniformly each epoch (matches the oracle)."""
     (rank, _, _), stats = run_program(
-        PAGERANK, g, mesh, axis=axis, pod_axis=pod_axis, cap=cap,
-        capacity_factor=capacity_factor, config=config, objective=objective,
-        params={"damping": float(damping), "iters": int(iters)}, seed=seed)
+        PAGERANK, g, mesh, options=options, axis=axis, pod_axis=pod_axis,
+        cap=cap, capacity_factor=capacity_factor, config=config,
+        objective=objective,
+        params={"damping": float(damping), "iters": int(iters)}, seed=seed,
+        route_impl=route_impl, round_mode=round_mode)
     return rank, stats
 
 
-def dcra_kcore(g: CSR, k: int, mesh, axis="data",
+def dcra_kcore(g: CSR, k: int, mesh, *,
+               options: Optional[LaunchOptions] = None, axis="data",
                capacity_factor: Optional[float] = None,
                max_rounds: int = 128, seed: int = 0, config=None,
-               objective="teps", cap: Optional[int] = None, pod_axis=None
+               objective="teps", cap: Optional[int] = None, pod_axis=None,
+               route_impl: Optional[str] = None,
+               round_mode: Optional[str] = None
                ) -> Tuple[np.ndarray, AppStats]:
     """Distributed k-core decomposition: iterative peel via owner-routed
     degree decrements. Returns each vertex's within-core degree (in+out,
@@ -401,7 +434,8 @@ def dcra_kcore(g: CSR, k: int, mesh, axis="data",
     k-core. Oracle: :func:`repro.sparse.ref.kcore_ref`.
     """
     (deg, alive), stats = run_program(
-        KCORE, g, mesh, axis=axis, pod_axis=pod_axis, cap=cap,
-        capacity_factor=capacity_factor, config=config, objective=objective,
-        params={"k": float(k)}, max_rounds=max_rounds, seed=seed)
+        KCORE, g, mesh, options=options, axis=axis, pod_axis=pod_axis,
+        cap=cap, capacity_factor=capacity_factor, config=config,
+        objective=objective, params={"k": float(k)}, max_rounds=max_rounds,
+        seed=seed, route_impl=route_impl, round_mode=round_mode)
     return np.where(alive > 0, deg, -1).astype(np.int64), stats

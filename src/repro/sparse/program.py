@@ -44,9 +44,12 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map_unchecked
 from ..core.queues import QueueConfig
-from ..core.routing import (owner_route, owner_route_hier, reduce_received,
-                            resolve_flat_cap, resolve_hier_caps,
-                            resolve_route_impl)
+from ..core.routing import (local_route_reduce, owner_route,
+                            owner_route_finish, owner_route_hier,
+                            owner_route_hier_start, owner_route_start,
+                            reduce_received, resolve_flat_cap,
+                            resolve_hier_caps, resolve_route_impl)
+from .options import LaunchOptions, resolve_options
 from ..core.task_engine import (EngineConfig, RoundStats, RunStats,
                                 TaskEngine)
 from ..core.topology import TileGrid
@@ -200,7 +203,7 @@ def _owner_pack_np(arr, n_dev, fill):
 # edge packing (host-side, shared with the analytic twin)
 # ---------------------------------------------------------------------------
 
-def _pack_edges(rows, cols, wts, n_dev, seed=0):
+def _pack_edges(rows, cols, wts, n_dev, seed=0):  # noqa: PLR0917
     """Partition edges by src-vertex owner (device-major flat arrays).
 
     Returns (src_slot, dst, w, E_max): each [n_dev * E_max]; padding edges
@@ -245,7 +248,8 @@ def _graph_setup(g, n_dev, undirected=False, seed=0):
 # launch resolution (config= / kwargs conflicts) — shared by every app
 # ---------------------------------------------------------------------------
 
-def resolve_launch(config, g, app, objective="teps", kwargs_set=()):
+def resolve_launch(config, g, app, objective="teps",  # noqa: PLR0917
+                   kwargs_set=()):
     """Resolve an app's ``config=`` kwarg to a ``LaunchConfig`` (or None).
 
     ``"auto"`` runs the Pareto-guided selection in
@@ -282,7 +286,8 @@ def _resolve_queues(prog: TaskProgram, queues, cap, capacity_factor):
     return QueueConfig.from_factor(capacity_factor, prog.task)
 
 
-def _graph_caps(queues: QueueConfig, task: str, e_local: int, n_dev: int,
+def _graph_caps(queues: QueueConfig, task: str,  # noqa: PLR0917
+                e_local: int, n_dev: int,
                 pods: Optional[Tuple[int, int]]) -> Tuple[int, ...]:
     """Per-round capacities for a graph program, flat or pod/portal.
 
@@ -364,11 +369,13 @@ def prewarm_program(prog: TaskProgram, data, mesh, **kwargs) -> Tuple[tuple,
 # the one-round owner-routed scatter (stream programs; public API)
 # ---------------------------------------------------------------------------
 
-def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
-                 capacity_factor: float = 1.5, pod_axis=None,
-                 cap: Optional[int] = None,
+def dcra_scatter(dest, vals, n, mesh, axis="data", *,  # noqa: PLR0917
+                 options: Optional[LaunchOptions] = None,
+                 op="add", capacity_factor: Optional[float] = None,
+                 pod_axis=None, cap: Optional[int] = None,
                  queues: Optional[QueueConfig] = None, task: str = "T3",
-                 route_impl: Optional[str] = None):
+                 route_impl: Optional[str] = None,
+                 round_mode: Optional[str] = None):
     """Owner-routed scatter-reduce: one NoC round.
 
     dest/vals: [E] sharded over the device axes (edge-parallel tasks);
@@ -394,13 +401,27 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     "onehot"; None = ``queues.route_impl`` or the backend-autodetected
     fast path — see :mod:`repro.kernels.route`); drop semantics are
     identical across impls, so the analytic twin needs no matching knob.
+
+    ``options=`` takes a :class:`LaunchOptions` in place of the legacy
+    kwargs (which keep working through the deprecation shim);
+    ``round_mode`` is validated but has no effect here — a scatter is a
+    single round, so lockstep and pipelined are the same shape (and share
+    one cache entry).
     """
+    opts = resolve_options(options, axis=axis, pod_axis=pod_axis, cap=cap,
+                           capacity_factor=capacity_factor, queues=queues,
+                           route_impl=route_impl, round_mode=round_mode)
+    axis, pod_axis = opts.axis, opts.pod_axis
+    queues, route_impl = opts.queues, opts.route_impl
     n_dev = mesh.devices.size
     e_local = dest.shape[0] // n_dev
     n_local = -(-n // n_dev)
     if queues is None:
-        queues = (QueueConfig.from_cap(cap, task) if cap is not None
-                  else QueueConfig.from_factor(capacity_factor, task))
+        queues = (QueueConfig.from_cap(opts.cap, task)
+                  if opts.cap is not None
+                  else QueueConfig.from_factor(
+                      1.5 if opts.capacity_factor is None
+                      else opts.capacity_factor, task))
     explicit = queues.iq_sizes.get(task, None)
     if explicit is not None and pod_axis is not None:
         raise ValueError("explicit cap is only defined for the flat path")
@@ -422,7 +443,8 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", op="add",
     return fn(dest, vals)
 
 
-def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op,
+def _build_scatter_fn(mesh, axis, pod_axis, pods,  # noqa: PLR0917
+                      n_dev, n_local, caps, op,
                       impl):
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
 
@@ -461,14 +483,17 @@ def _build_scatter_fn(mesh, axis, pod_axis, pods, n_dev, n_local, caps, op,
 # the runtime
 # ---------------------------------------------------------------------------
 
-def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
+def run_program(prog: TaskProgram, data, mesh, *,
+                options: Optional[LaunchOptions] = None,
+                axis="data", pod_axis=None,
                 capacity_factor: Optional[float] = None,
                 cap: Optional[int] = None,
                 queues: Optional[QueueConfig] = None,
                 config=None, objective="teps",
                 params: Optional[Mapping] = None,
                 max_rounds: Optional[int] = None, seed: int = 0,
-                dataset=None, route_impl: Optional[str] = None):
+                dataset=None, route_impl: Optional[str] = None,
+                round_mode: Optional[str] = None):
     """Execute a :class:`TaskProgram` on ``mesh``.
 
     Graph programs return ``(state_arrays, AppStats)`` — each state array
@@ -478,12 +503,26 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
     ``route_impl`` picks the routing hot-path engine ("pallas" | "sort" |
     "onehot"; None = ``queues.route_impl`` or backend autodetect) — part
     of the compile-cache key, never of the drop semantics.
+
+    ``options=`` takes a :class:`LaunchOptions` holding every launch
+    kwarg above (the legacy kwargs keep working through the deprecation
+    shim, resolving through the identical conflict checks and producing
+    the identical cache key). ``round_mode="pipelined"`` selects the
+    double-buffered round shape (see :func:`_build_graph_fn`) —
+    bit-identical results and per-round stats, fewer collectives.
     """
+    opts = resolve_options(options, axis=axis, pod_axis=pod_axis,
+                           capacity_factor=capacity_factor, cap=cap,
+                           queues=queues, config=config, objective=objective,
+                           seed=seed, route_impl=route_impl,
+                           round_mode=round_mode)
+    axis, pod_axis, queues = opts.axis, opts.pod_axis, opts.queues
+    cap, capacity_factor = opts.cap, opts.capacity_factor
+    config, objective, seed = opts.config, opts.objective, opts.seed
+    route_impl, round_mode = opts.route_impl, opts.round_mode
     params = dict(params or {})
-    kwargs_set = [k for k, v in (("capacity_factor", capacity_factor),
-                                 ("cap", cap)) if v is not None]
     lc = resolve_launch(config, data if dataset is None else dataset,
-                        prog.name, objective, kwargs_set=kwargs_set)
+                        prog.name, objective)
     n_dev = mesh.devices.size
 
     if prog.mode == "single":
@@ -511,10 +550,11 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
                                           np.int64),
                         drops=np.array([0], np.int64))
                     return y, stats
-        y_sh, dropped = dcra_scatter(jnp.asarray(dest), jnp.asarray(vals),
-                                     n_items, mesh, axis, op=prog.reduce_op,
-                                     pod_axis=pod_axis, queues=queues,
-                                     task=prog.task, route_impl=route_impl)
+        y_sh, dropped = dcra_scatter(
+            jnp.asarray(dest), jnp.asarray(vals), n_items, mesh,
+            options=LaunchOptions(axis=axis, pod_axis=pod_axis,
+                                  queues=queues, route_impl=route_impl),
+            op=prog.reduce_op, task=prog.task)
         stats = AppStats(rounds=1,
                          messages=np.array([int((dest >= 0).sum())],
                                            np.int64),
@@ -554,12 +594,14 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
     # arrays, never the traced rules — keep them out of the key and out
     # of the kernel's Ctx so serving-style request streams hit the cache
     kparams = {k: v for k, v in params.items() if k not in prog.init_only}
+    if rounds == 0:
+        round_mode = "lockstep"          # no rounds, nothing to overlap
     key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
-           impl, rounds, len(packed), tuple(sorted(kparams.items())),
-           _mesh_key(mesh))
+           impl, rounds, round_mode, len(packed),
+           tuple(sorted(kparams.items())), _mesh_key(mesh))
     fn = _cached(key, lambda: _build_graph_fn(
         prog, mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
-        kparams, rounds, len(packed), impl))
+        kparams, rounds, len(packed), impl, round_mode=round_mode))
     out = fn(src_slot, dst, w, *packed)
     states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
     stats = _collect_stats(r, msgs, drops)
@@ -568,8 +610,40 @@ def run_program(prog: TaskProgram, data, mesh, *, axis="data", pod_axis=None,
     return states_np, stats
 
 
-def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
-                    caps, params, rounds, n_states, impl=None):
+def _build_graph_fn(prog, mesh, axis, pod_axis, pods,  # noqa: PLR0917
+                    n_dev, n_local, n,
+                    caps, params, rounds, n_states, impl=None,
+                    round_mode="lockstep"):
+    """Build the jitted shard_map callable for one graph-program shape.
+
+    Two execution shapes, selected by ``round_mode`` (bit-identical
+    results and per-round stats — differentially tested in
+    tests/test_pipeline.py):
+
+    * ``"lockstep"`` — the classic round: payload -> bucket -> fused
+      all_to_all -> receive-reduce -> update, plus per-round scalar psums
+      for the message count, the drop count and (while mode) the
+      convergence predicate: 4 collectives per round.
+    * ``"pipelined"`` — the double-buffered round: the collective for
+      round k is launched at the tail of loop iteration k-1 and its
+      receive-reduce is folded into the head of iteration k, so round
+      k+1's payload + bucket-rank run while round k's wire buffer is the
+      loop carry. Message/drop counters stay shard-local int32 streams
+      committed per round and are psum'd ONCE after the loop (integer
+      sums — order-free, so the stats are bit-identical), and the
+      while-mode convergence count rides the collective itself as one
+      extra broadcast row per destination bucket
+      (:func:`~repro.core.routing._a2a_with_signal`): 1 collective per
+      round. A converged launch costs one ghost iteration whose commits
+      are all gated off (``is_real``), exactly reproducing lockstep's
+      "round 0 always executes" initial ``changed=True``.
+
+      The degenerate 1-device flat launch with an order-insensitive
+      reduce has a *local* communication edge, so the receive-reduce is
+      instead folded into admission (:func:`local_route_reduce`) — no
+      wire buffer at all; ``add``-reduce keeps the generic shape (its
+      summation order must match lockstep's bucket order).
+    """
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
     axes = (pod_axis, axis) if pod_axis else axis
 
@@ -577,6 +651,9 @@ def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
         return jax.lax.psum(x, axes)
 
     ctx = Ctx(xp=jnp, n=n, n_dev=n_dev, params=params, gsum=gsum)
+    fold_local = (round_mode == "pipelined" and pod_axis is None
+                  and n_dev == 1 and prog.reduce_op in ("min", "store"))
+    pipelined = round_mode == "pipelined" and not fold_local
 
     def kernel(src_slot_b, dst_b, w_b, *state_b):
         CACHE_STATS["kernel_traces"] += 1
@@ -584,28 +661,99 @@ def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
         slot = jnp.maximum(dst_b, 0) // n_dev
         evalid = dst_b >= 0
 
+        def active_of(frontier):
+            return (frontier[src_slot_b] & evalid
+                    if prog.active == "frontier" else evalid)
+
         def do_round(state, frontier):
-            active = (frontier[src_slot_b] & evalid
-                      if prog.active == "frontier" else evalid)
+            active = active_of(frontier)
             vals = prog.payload(ctx, state, src_slot_b,
                                 w_b).astype(jnp.float32)
             m = gsum(jnp.sum(active.astype(jnp.int32)))
-            if pod_axis is None:
-                recv_slot, recv_val, nd = owner_route(
-                    vals, slot, owner, active, n_dev, caps[0], axis,
-                    impl=impl)
+            if fold_local:
+                upd, nd = local_route_reduce(
+                    vals, slot, owner, active, n_dev, caps[0], n_local,
+                    prog.reduce_op, impl=impl)
             else:
-                recv_slot, recv_val, nd = owner_route_hier(
-                    vals, slot, owner, active, pods[0], axis, pods[1],
-                    pod_axis, caps[0], caps[1], impl=impl)
-            upd = reduce_received(recv_slot, recv_val, n_local,
-                                  prog.reduce_op, impl=impl)
+                if pod_axis is None:
+                    recv_slot, recv_val, nd = owner_route(
+                        vals, slot, owner, active, n_dev, caps[0], axis,
+                        impl=impl)
+                else:
+                    recv_slot, recv_val, nd = owner_route_hier(
+                        vals, slot, owner, active, pods[0], axis, pods[1],
+                        pod_axis, caps[0], caps[1], impl=impl)
+                upd = reduce_received(recv_slot, recv_val, n_local,
+                                      prog.reduce_op, impl=impl)
             state2, frontier2 = prog.update(ctx, state, frontier, upd)
             return state2, frontier2, m, gsum(nd.astype(jnp.int32))
 
+        # -- pipelined produce/consume halves --------------------------------
+        meta_box = []                 # static wire meta (same every round)
+
+        def produce(state, frontier):
+            """Round tail: payload + bucket + LAUNCH the collective.
+            Stats stay shard-local; the local frontier count rides the
+            wire as the convergence signal."""
+            active = active_of(frontier)
+            vals = prog.payload(ctx, state, src_slot_b,
+                                w_b).astype(jnp.float32)
+            m_loc = jnp.sum(active.astype(jnp.int32))
+            fcnt = jnp.sum(frontier.astype(jnp.int32))
+            if pod_axis is None:
+                recv, meta, nd_loc, gcnt = owner_route_start(
+                    vals, slot, owner, active, n_dev, caps[0], axis,
+                    fcnt, impl=impl)
+            else:
+                recv, meta, nd_loc, gcnt = owner_route_hier_start(
+                    vals, slot, owner, active, pods[0], axis, pods[1],
+                    pod_axis, caps[0], caps[1], fcnt, impl=impl)
+            if not meta_box:
+                meta_box.append(meta)
+            return recv, m_loc, nd_loc, gcnt
+
+        def consume(recv):
+            """Round head: receive-reduce folded into the carried
+            communication edge."""
+            recv_slot, recv_val = owner_route_finish(recv, meta_box[0])
+            return reduce_received(recv_slot, recv_val, n_local,
+                                   prog.reduce_op, impl=impl)
+
         zeros = jnp.zeros((rounds,), jnp.int32)
         frontier0 = prog.frontier0(ctx, state_b)
-        if prog.mode == "while":
+
+        if prog.mode == "while" and pipelined:
+            recv0, m0, nd0, g0 = produce(state_b, frontier0)
+
+            def cond(s):
+                r, running = s[6], s[9]
+                return running & (r < rounds)
+
+            def body(s):
+                (state, frontier, recv, m_pend, nd_pend, gcnt, r, msgs,
+                 drops, _run) = s
+                upd = consume(recv)
+                # gcnt is the global pre-round frontier count (summed
+                # across both hier stages), identical on every shard —
+                # round 0 always executes, like lockstep's changed=True
+                is_real = (gcnt > 0) | (r == 0)
+                state2, frontier2 = prog.update(ctx, state, frontier, upd)
+                state_n = tuple(jnp.where(is_real, a, b)
+                                for a, b in zip(state2, state))
+                frontier_n = jnp.where(is_real, frontier2, frontier)
+                msgs_n = jnp.where(is_real, msgs.at[r].set(m_pend), msgs)
+                drops_n = jnp.where(is_real, drops.at[r].set(nd_pend),
+                                    drops)
+                r_n = r + is_real.astype(jnp.int32)
+                recv_n, m_n, nd_n, g_n = produce(state_n, frontier_n)
+                return (state_n, frontier_n, recv_n, m_n, nd_n, g_n, r_n,
+                        msgs_n, drops_n, is_real)
+
+            out = jax.lax.while_loop(
+                cond, body, (state_b, frontier0, recv0, m0, nd0, g0,
+                             jnp.int32(0), zeros, zeros, jnp.bool_(True)))
+            state, r, msgs, drops = out[0], out[6], gsum(out[7]), gsum(out[8])
+        elif prog.mode == "while":                 # lockstep / fold_local
             def cond(s):
                 _, _, r, _, _, changed = s
                 return changed & (r < rounds)
@@ -620,7 +768,29 @@ def _build_graph_fn(prog, mesh, axis, pod_axis, pods, n_dev, n_local, n,
             state, _, r, msgs, drops, _ = jax.lax.while_loop(
                 cond, body, (state_b, frontier0, jnp.int32(0), zeros,
                              zeros, jnp.bool_(True)))
-        else:                                                  # "fixed"
+        elif pipelined:                            # "fixed", double-buffered
+            recv0, m0, nd0, _g0 = produce(state_b, frontier0)
+
+            def body(i, s):
+                state, frontier, recv, m_pend, nd_pend, msgs, drops = s
+                upd = consume(recv)
+                state2, frontier2 = prog.update(ctx, state, frontier, upd)
+                recv_n, m_n, nd_n, _g = produce(state2, frontier2)
+                return (state2, frontier2, recv_n, m_n, nd_n,
+                        msgs.at[i].set(m_pend), drops.at[i].set(nd_pend))
+
+            # rounds-1 full iterations, then drain the last in-flight
+            # round without launching a trailing (wasted) collective
+            s = jax.lax.fori_loop(0, rounds - 1, body,
+                                  (state_b, frontier0, recv0, m0, nd0,
+                                   zeros, zeros))
+            state, frontier, recv, m_pend, nd_pend, msgs, drops = s
+            upd = consume(recv)
+            state, _f = prog.update(ctx, state, frontier, upd)
+            msgs = gsum(msgs.at[rounds - 1].set(m_pend))
+            drops = gsum(drops.at[rounds - 1].set(nd_pend))
+            r = jnp.int32(rounds)
+        else:                                      # "fixed" lockstep/fold
             def body(i, s):
                 state, frontier, msgs, drops = s
                 state2, frontier2, m, nd = do_round(state, frontier)
@@ -662,13 +832,13 @@ def _bucket_positions(chan, active):
     return pos
 
 
-def _flat_keep(dev_of, owner, active, cap, n_dev):
+def _flat_keep(dev_of, owner, active, cap, n_dev):  # noqa: PLR0917
     pos = _bucket_positions(dev_of * n_dev + owner, active)
     keep = active & (pos < cap)
     return keep, int(active.sum() - keep.sum())
 
 
-def _hier_keep(dev_of, owner, active, caps, pods):
+def _hier_keep(dev_of, owner, active, caps, pods):  # noqa: PLR0917
     """Two-stage pod/portal keep rule (mirrors ``owner_route_hier``):
     stage 1 admits per (sender, dest-intra-coordinate) channel at cap1;
     stage 2 admits at the portal per dest pod at cap2, in the receive
@@ -692,7 +862,8 @@ def _hier_keep(dev_of, owner, active, caps, pods):
     return keep, drop1 + drop2
 
 
-def program_rounds(prog: TaskProgram, g, n_dev, caps, params=None, seed=0,
+def program_rounds(prog: TaskProgram, g, n_dev, caps,  # noqa: PLR0917
+                   params=None, seed=0,
                    pods=None, max_rounds=None, setup=None):
     """Host mirror of :func:`run_program`'s round loop for a graph
     program: yields, per executable round, the routed task stream

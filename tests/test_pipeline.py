@@ -1,0 +1,311 @@
+"""The pipelined round shape and the LaunchOptions launch surface.
+
+Part A — in-process (1 device): the ``resolve_options`` deprecation shim
+(legacy kwargs and ``options=`` resolve to THE SAME compile-cache entry,
+the warning fires once per process, conflicts raise), ``round_mode`` /
+``route_impl`` land in the compile-cache key, every entrypoint accepts
+``options=``, ``local_route_reduce`` is bit-identical to the two-pass
+``bucket`` + ``reduce_received`` shape, the round-level route_compare
+gate, and a pipelined ``ProgramServer`` serves identically.
+
+Part B (subprocess, 8 fake host devices) — the bit-identity contract of
+``round_mode="pipelined"``: for every iterative program, flat AND
+pod/portal, loose AND overflowing caps, 1/2/4/8 devices, the pipelined
+executable's results, rounds, and per-round message/drop streams equal
+lockstep's exactly — and the UNCHANGED analytic twin
+(``program_app_stats``) still matches the pipelined run.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+ITER_APPS = ("bfs", "sssp", "wcc", "pagerank", "kcore")
+
+
+# ---------------------------------------------------------------------------
+# Part A: the launch surface (1 device, in-process)
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    from repro.sparse import datasets
+    return datasets.wiki_like(96, avg_degree=4, seed=11)
+
+
+def _mesh1():
+    from repro.core.compat import make_mesh
+    return make_mesh((1,), ("data",))
+
+
+def test_legacy_kwargs_and_options_share_one_cache_entry():
+    """The shim is an alias, not a fork: same key, same jitted callable,
+    bit-identical result."""
+    from repro.sparse import LaunchOptions, options as opt_mod, program
+    from repro.sparse.jax_apps import dcra_bfs
+    g, mesh = _tiny(), _mesh1()
+    program.clear_cache()
+    opt_mod._WARNED[0] = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d1, s1 = dcra_bfs(g, 0, mesh, capacity_factor=2.0)
+        d1b, _ = dcra_bfs(g, 0, mesh, capacity_factor=2.0)
+    legacy_warns = [x for x in w if issubclass(x.category,
+                                               DeprecationWarning)]
+    assert len(legacy_warns) == 1            # once per process, not per call
+    after_legacy = program.cache_stats()
+    d2, s2 = dcra_bfs(g, 0, mesh,
+                      options=LaunchOptions(capacity_factor=2.0))
+    after_options = program.cache_stats()
+    assert after_options["misses"] == after_legacy["misses"]   # same key
+    assert after_options["hits"] == after_legacy["hits"] + 1
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d1b))
+    assert s1.rounds == s2.rounds and s1.total_drops == s2.total_drops
+
+
+def test_round_mode_and_route_impl_are_cache_key_dimensions():
+    from repro.sparse import LaunchOptions, program
+    from repro.sparse.jax_apps import dcra_bfs
+    g, mesh = _tiny(), _mesh1()
+    program.clear_cache()
+    dcra_bfs(g, 0, mesh)
+    assert program.cache_stats()["misses"] == 1
+    dcra_bfs(g, 0, mesh, options=LaunchOptions(round_mode="pipelined"))
+    assert program.cache_stats()["misses"] == 2
+    dcra_bfs(g, 0, mesh, options=LaunchOptions(round_mode="pipelined"))
+    assert program.cache_stats()["misses"] == 2    # pipelined entry reused
+    dcra_bfs(g, 0, mesh, options=LaunchOptions(route_impl="sort"))
+    assert program.cache_stats()["misses"] == 3
+
+
+def test_option_conflicts_raise():
+    from repro.sparse import LaunchOptions
+    from repro.sparse.jax_apps import dcra_bfs, dcra_spmv
+    g = _tiny()
+    with pytest.raises(ValueError, match="conflicts"):
+        dcra_bfs(g, 0, mesh=None, cap=4, capacity_factor=2.0)
+    with pytest.raises(ValueError, match="conflicts"):
+        dcra_spmv(g, np.ones(g.n), mesh=None, cap=4, config="auto")
+    with pytest.raises(ValueError, match="conflicts"):
+        dcra_bfs(g, 0, mesh=None, options=LaunchOptions(), cap=4)
+    with pytest.raises(ValueError, match="round_mode"):
+        dcra_bfs(g, 0, mesh=None, round_mode="warp")
+    with pytest.raises(ValueError, match="route_impl"):
+        LaunchOptions(route_impl="bogus").resolve()
+    with pytest.raises(TypeError, match="unknown"):
+        from repro.sparse.options import resolve_options
+        resolve_options(None, caps=4)
+
+
+def test_every_entrypoint_accepts_options():
+    """All seven dcra_* apps + run_program + dcra_scatter take options=
+    and agree bitwise with their legacy-kwarg spelling."""
+    from repro.sparse import LaunchOptions, jax_apps
+    from repro.sparse import datasets
+    from repro.sparse.jax_apps import PROGRAMS, dcra_scatter, run_program
+    import jax.numpy as jnp
+    g, mesh = _tiny(), _mesh1()
+    x = np.random.default_rng(0).random(g.n)
+    els = datasets.histogram_data(512, 16, seed=4)
+    opts = LaunchOptions(capacity_factor=2.0)
+    calls = {
+        "bfs": lambda **kw: jax_apps.dcra_bfs(g, 0, mesh, **kw),
+        "sssp": lambda **kw: jax_apps.dcra_sssp(g, 0, mesh, **kw),
+        "wcc": lambda **kw: jax_apps.dcra_wcc(g, mesh, **kw),
+        "pagerank": lambda **kw: jax_apps.dcra_pagerank(
+            g, mesh, iters=3, **kw),
+        "kcore": lambda **kw: jax_apps.dcra_kcore(g, 3, mesh, **kw),
+        "spmv": lambda **kw: jax_apps.dcra_spmv(g, x, mesh, **kw),
+        "histogram": lambda **kw: jax_apps.dcra_histogram(
+            els, 16, mesh, **kw),
+    }
+    assert set(calls) == set(PROGRAMS)
+    for app, call in calls.items():
+        got, _ = call(options=opts)
+        want, _ = call(capacity_factor=2.0)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), app
+    r1, _ = run_program(PROGRAMS["bfs"], g, mesh, options=opts,
+                        params={"root": 0})
+    r2, _ = run_program(PROGRAMS["bfs"], g, mesh, capacity_factor=2.0,
+                        params={"root": 0})
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    dest = jnp.asarray(np.arange(32) % 8)
+    vals = jnp.ones(32, jnp.float32)
+    y1, _ = dcra_scatter(dest, vals, 8, mesh, options=opts)
+    y2, _ = dcra_scatter(dest, vals, 8, mesh, capacity_factor=2.0)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@pytest.mark.parametrize("op", ["min", "store"])
+def test_local_route_reduce_matches_two_pass_shape(op):
+    """The 1-device pipelined fold == bucket + reduce_received, bitwise,
+    including the drop count, under overflowing caps."""
+    import jax.numpy as jnp
+    from repro.core.routing import (bucket, local_route_reduce,
+                                    reduce_received)
+    rng = np.random.default_rng(5)
+    n, s, cap, n_local = 512, 8, 16, 64        # 512 >> s*cap: drops
+    dest = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    vals = jnp.asarray(rng.random(n), jnp.float32)
+    slots = jnp.asarray(rng.integers(0, n_local, n), jnp.int32)
+    xb, (slot_b,), _, nd_ref = bucket(vals[:, None], dest, valid, [slots],
+                                      s, cap)
+    want = reduce_received(slot_b, xb[:, 0], n_local, op)
+    got, nd = local_route_reduce(vals, slots, dest, valid, s, cap,
+                                 n_local, op)
+    assert int(nd) == int(nd_ref) and int(nd) > 0
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+    with pytest.raises(ValueError):
+        local_route_reduce(vals, slots, dest, valid, s, cap, n_local,
+                           "add")
+
+
+def test_route_compare_gates_round_cells():
+    from repro.dse.route_compare import compare
+    rcell = {"n": 131072, "s": 128, "cap": 2048, "rounds": 6,
+             "round_speedup": {"onehot": 1.2, "sort": 1.5, "pallas": 2.3}}
+    old = {"schema": "dcra-route-bench/v2", "cells": [
+        {"n": 1, "s": 1, "speedup_vs_onehot": {"onehot": 1.0}}],
+        "round_cells": [rcell]}
+    f, _ = compare(old, old)
+    assert not f
+    worse = json.loads(json.dumps(old))
+    worse["round_cells"][0]["round_speedup"]["pallas"] = 1.0   # -57%
+    f, _ = compare(old, worse)
+    assert any("round" in x and "REGRESSED" in x for x in f)
+    gone = json.loads(json.dumps(old))
+    gone["round_cells"] = []
+    f, _ = compare(old, gone)
+    assert any("round_cells" in x for x in f)
+    v1 = {"schema": "dcra-route-bench/v1", "cells": old["cells"]}
+    f, notes = compare(v1, old)                # v1 baseline: report, no gate
+    assert not f and any("not gated" in x for x in notes)
+
+
+def test_pipelined_program_server_serves_identically():
+    from repro.serve import LaunchOptions, ProgramServer, Request
+    g, mesh = _tiny(), _mesh1()
+    reqs = [Request(req_id=i, tenant=f"t{i % 2}", program=p, graph="g",
+                    root=i % g.n)
+            for i, p in enumerate(("bfs", "sssp", "bfs", "sssp"))]
+    base = ProgramServer(mesh, {"g": g}).run(list(reqs))
+    pipe = ProgramServer(
+        mesh, {"g": g},
+        options=LaunchOptions(round_mode="pipelined")).run(list(reqs))
+    assert len(base) == len(pipe) == len(reqs)
+    for a, b in zip(base, pipe):
+        assert a.status == b.status and a.rounds == b.rounds
+        assert np.array_equal(np.asarray(a.result), np.asarray(b.result))
+    with pytest.raises(ValueError, match="conflicts"):
+        ProgramServer(mesh, {"g": g}, axis="model",
+                      options=LaunchOptions())
+
+
+# ---------------------------------------------------------------------------
+# Part B: pipelined == lockstep under shard_map (subprocess)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json
+import jax
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.sparse import datasets
+from repro.sparse.jax_apps import PROGRAMS
+from repro.sparse.program import program_app_stats, run_program
+
+g = datasets.wiki_like(256, avg_degree=8, seed=7)
+PARAMS = {'bfs': {'root': 0}, 'sssp': {'root': 0}, 'wcc': {},
+          'pagerank': {'damping': 0.85, 'iters': 4}, 'kcore': {'k': 8.0}}
+ITER = tuple(PARAMS)
+
+def pair(app, mesh, n_dev, tag, twin_kw, **kw):
+    r_l, s_l = run_program(PROGRAMS[app], g, mesh, params=PARAMS[app],
+                           round_mode='lockstep', **kw)
+    r_p, s_p = run_program(PROGRAMS[app], g, mesh, params=PARAMS[app],
+                           round_mode='pipelined', **kw)
+    leaves = zip(jax.tree_util.tree_leaves(r_l),
+                 jax.tree_util.tree_leaves(r_p))
+    twin = program_app_stats(PROGRAMS[app], g, n_dev, params=PARAMS[app],
+                             **twin_kw)
+    return {'app': app, 'n_dev': n_dev, 'tag': tag,
+            'results_equal': all(np.array_equal(np.asarray(a),
+                                                np.asarray(b))
+                                 for a, b in leaves),
+            'rounds_equal': s_l.rounds == s_p.rounds,
+            'streams_equal': (np.array_equal(s_l.messages, s_p.messages)
+                              and np.array_equal(s_l.drops, s_p.drops)),
+            'twin_ok': (twin.rounds == s_p.rounds
+                        and np.array_equal(twin.messages, s_p.messages)
+                        and np.array_equal(twin.drops, s_p.drops)),
+            'drops': int(s_p.total_drops), 'rounds': int(s_p.rounds)}
+
+cases = []
+for n_dev in (1, 2, 4, 8):
+    mesh = make_mesh((n_dev,), ('data',))
+    apps = ITER if n_dev in (1, 8) else ('bfs',)
+    for app in apps:
+        cases.append(pair(app, mesh, n_dev, 'cap2', {'cap': 2}, cap=2))
+        if n_dev == 8:
+            cases.append(pair(app, mesh, n_dev, 'cf4',
+                              {'capacity_factor': 4.0},
+                              capacity_factor=4.0))
+hier = make_mesh((2, 4), ('pod', 'data'))
+for app, cf in (('bfs', 0.25), ('bfs', 4.0), ('pagerank', 0.5)):
+    cases.append(pair(app, hier, 8, f'pod-cf{cf}',
+                      {'capacity_factor': cf, 'pods': (4, 2)},
+                      pod_axis='pod', capacity_factor=cf))
+print('RESULT ' + json.dumps(cases))
+"""
+
+
+@pytest.fixture(scope="module")
+def cases():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("app", ITER_APPS)
+def test_pipelined_is_bit_identical_to_lockstep(cases, app):
+    mine = [c for c in cases if c["app"] == app]
+    assert mine, app
+    bad = [c for c in mine if not (c["results_equal"] and c["rounds_equal"]
+                                   and c["streams_equal"])]
+    assert not bad, bad
+
+
+@pytest.mark.parametrize("app", ITER_APPS)
+def test_unchanged_twin_matches_pipelined(cases, app):
+    """program_app_stats needed NO pipelined variant — the analytic twin
+    models rounds, and the pipeline only reshapes their execution."""
+    bad = [c for c in cases if c["app"] == app and not c["twin_ok"]]
+    assert not bad, bad
+
+
+def test_tight_caps_drop_under_pipelining(cases):
+    """cap=2 must overflow in the pipelined shape too, or the drop-stream
+    agreement above is vacuous."""
+    for app in ITER_APPS:
+        tight = [c for c in cases if c["app"] == app and c["tag"] == "cap2"]
+        assert any(c["drops"] > 0 for c in tight), (app, tight)
+
+
+def test_pod_portal_covered_both_modes(cases):
+    pods = [c for c in cases if c["tag"].startswith("pod")]
+    assert {c["app"] for c in pods} == {"bfs", "pagerank"}
+    assert all(c["results_equal"] and c["streams_equal"] and c["twin_ok"]
+               for c in pods), pods
