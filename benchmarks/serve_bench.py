@@ -13,7 +13,11 @@ under load, zero unaccounted drops, results bit-identical to a
 standalone launch) and prints ``RESULT ok``.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--devices 8]
-      [--requests 48] [--tenants 6] [--smoke]
+      [--requests 48] [--tenants 6] [--smoke] [--fabric]
+
+``--fabric`` drives the whole bench through the :class:`repro.core.fabric`
+launch surface (``Fabric.fake`` -> ``ProgramServer(fabric, ...)``) instead
+of a raw Mesh; both legs must report identical serving invariants.
 """
 from __future__ import annotations
 
@@ -80,6 +84,9 @@ def main(argv=None) -> None:
     ap.add_argument("--vertices", type=int, default=192)
     ap.add_argument("--smoke", action="store_true",
                     help="short CI stream; assert serving invariants")
+    ap.add_argument("--fabric", action="store_true",
+                    help="launch through the Fabric surface instead of a "
+                         "raw Mesh")
     args = ap.parse_args(argv)
     if args.smoke:
         args.tenants = min(args.tenants, 4)
@@ -87,7 +94,11 @@ def main(argv=None) -> None:
 
     import jax
     n_dev = min(args.devices, len(jax.devices()))
-    mesh = make_mesh((n_dev,), ("data",))
+    if args.fabric:
+        from repro.core.fabric import Fabric
+        mesh = Fabric.fake(n_dev)
+    else:
+        mesh = make_mesh((n_dev,), ("data",))
     graphs = {
         "wiki": datasets.wiki_like(args.vertices, avg_degree=6, seed=3),
         "er": datasets.erdos_renyi(args.vertices, avg_degree=4, seed=7),
@@ -112,7 +123,9 @@ def main(argv=None) -> None:
              f"{s['p99_latency_s'] * 1e3:.1f}")
             for t, s in sorted(snap["tenants"].items())]
     emit(rows, "tenant,submitted,served,rejected,failed,p50_ms,p99_ms")
-    print(f"# devices={n_dev} width={args.width} prewarm={warm_s:.1f}s "
+    print(f"# devices={n_dev} width={args.width} "
+          f"surface={'fabric' if args.fabric else 'mesh'} "
+          f"prewarm={warm_s:.1f}s "
           f"serve={serve_s:.1f}s "
           f"throughput={args.requests / serve_s:.1f} req/s")
     print(f"# launches={snap['launches']} "

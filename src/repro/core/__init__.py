@@ -6,6 +6,7 @@
 from .cache import CacheModel, DRAMConfig, SRAMConfig          # noqa: F401
 from .compat import make_mesh, set_mesh, shard_map_unchecked   # noqa: F401
 from .dispatch import MeshInfo, dispatch_queues, moe_dcra       # noqa: F401
+from .fabric import Fabric, as_fabric, axis_sizes_of            # noqa: F401
 from .queues import QueueConfig, QueueStats                     # noqa: F401
 from .routing import (bucket, fused_all_to_all, gather_rows,    # noqa: F401
                       noc_all_to_all, owner_route,

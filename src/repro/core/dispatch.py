@@ -62,16 +62,16 @@ class MeshInfo:
     fuse_tp: bool = True                 # fold tp into the expert group when
                                          # E divides (no psum, no seq gather)
 
+    def __post_init__(self):
+        from .fabric import Fabric
+        if isinstance(self.mesh, Fabric):      # accept a Fabric transparently
+            object.__setattr__(self, "mesh", self.mesh.mesh)
+
     def axis_size(self, name) -> int:
-        if name is None:
-            return 1
-        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
-        if isinstance(name, (tuple, list)):
-            out = 1
-            for n in name:
-                out *= sizes[n]
-            return out
-        return sizes[name]
+        from .fabric import Fabric
+        if isinstance(name, list):
+            name = tuple(name)
+        return Fabric.of(self.mesh).axis_size(name)
 
     def all_axes(self) -> Tuple[str, ...]:
         return tuple(self.mesh.axis_names)

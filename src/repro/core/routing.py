@@ -80,6 +80,32 @@ def resolve_hier_caps(queues, task: str, e_local: int, n_intra: int,
     return cap1, cap2
 
 
+def resolve_caps(fabric, queues, task: str, e_local: int, axis: str,
+                 pod_axis: Optional[str], *, clamp: bool = False
+                 ) -> Tuple[Tuple[int, ...], Optional[Tuple[int, int]]]:
+    """One launch's per-round capacities against a fabric: ``(caps, pods)``.
+
+    Flat path (``pod_axis is None``): a 1-tuple cap over the fabric's
+    whole device count, ``pods = None``. Pod/portal path: the 2-stage
+    caps plus ``pods = (n_intra, n_pods)`` read off the fabric's axis
+    sizes — the ONE place launches turn mesh axes into routing stage
+    sizes (previously re-derived privately by ``dcra_scatter`` and the
+    graph runtime). Explicit per-``task`` capacities are only defined for
+    the flat path — the DSE revalidation honors them exactly, while the
+    2-stage caps are relative. ``fabric`` is duck-typed (anything with
+    ``axis_sizes`` / ``n_devices``, i.e. :class:`repro.core.fabric
+    .Fabric`), so this layer stays import-free of the fabric module.
+    """
+    if queues.iq_sizes.get(task) is not None and pod_axis is not None:
+        raise ValueError("explicit cap is only defined for the flat path")
+    if pod_axis is None:
+        return ((resolve_flat_cap(queues, task, e_local, fabric.n_devices,
+                                  clamp=clamp),), None)
+    sizes = fabric.axis_sizes
+    pods = (sizes[axis], sizes[pod_axis])
+    return resolve_hier_caps(queues, task, e_local, *pods), pods
+
+
 # ---------------------------------------------------------------------------
 # bucketing (the bounded IQ)
 # ---------------------------------------------------------------------------

@@ -247,13 +247,15 @@ class LaunchConfig:
         """The point's tile-level queue sizing (single source of truth)."""
         return self.point.engine_config().queues
 
-    def pod_axis_for(self, mesh) -> Optional[str]:
+    def pod_axis_for(self, fabric) -> Optional[str]:
         """Hierarchical pod/portal routing when the point asks for it AND
-        the mesh actually has a multi-pod axis to route over."""
+        the fabric actually has a multi-pod axis to route over (the
+        mesh-introspection half now lives on
+        :attr:`repro.core.fabric.Fabric.pod_axis`; raw meshes accepted)."""
         if self.point.topology != "hier_torus":
             return None
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        return "pod" if sizes.get("pod", 1) > 1 else None
+        from ..core.fabric import Fabric
+        return Fabric.of(fabric).pod_axis
 
     def device_queues(self, n_dev: int, e_local: int, task: str = "T3",
                       pod: bool = False) -> QueueConfig:

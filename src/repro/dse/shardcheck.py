@@ -61,12 +61,13 @@ PROGRAM_PARAMS = {
 }
 
 
-def _analytic_counts(dest: np.ndarray, n: int, n_dev: int, cap: int):
-    """The same stream through the analytic twin at shard parallelism."""
+def _analytic_counts(dest: np.ndarray, n: int, fab, cap: int):
+    """The same stream through the analytic twin at shard parallelism
+    (``fab.tile_grid()`` — one tile per shard)."""
     from ..core.queues import QueueConfig
     from ..core.task_engine import EngineConfig, TaskEngine
-    from ..core.topology import TileGrid
-    engine = TaskEngine(EngineConfig(grid=TileGrid(1, n_dev),
+    n_dev = fab.n_devices
+    engine = TaskEngine(EngineConfig(grid=fab.tile_grid(),
                                      queues=QueueConfig(default_iq=cap)), n)
     e_local = len(dest) // n_dev
     shard_of = np.repeat(np.arange(n_dev), e_local)
@@ -78,12 +79,13 @@ def _analytic_counts(dest: np.ndarray, n: int, n_dev: int, cap: int):
 
 def check_point(check: dict, n_dev: int, scale: int, seed: int) -> list:
     import jax.numpy as jnp
-    from ..core.compat import make_mesh
+    from ..core.fabric import Fabric
     from ..sparse import datasets
     from ..sparse.jax_apps import (dcra_histogram, dcra_scatter, dcra_spmv,
                                    histogram_task_stream, spmv_task_stream)
 
-    mesh = make_mesh((n_dev,), ("data",))
+    fab = Fabric.fake(n_dev)
+    mesh = fab             # every launch below goes through the Fabric path
     cap = max(1, int(check["iq_capacity"]))  # honored exactly, no rounding
     g = datasets.rmat(scale, edge_factor=8, seed=1)
     out = []
@@ -157,7 +159,7 @@ def check_point(check: dict, n_dev: int, scale: int, seed: int) -> list:
             raise ValueError(f"unsupported revalidation app {app!r}")
         exe_drops = int(dropped)
         exe_msgs = kept + exe_drops
-        ana_msgs, ana_drops = _analytic_counts(dest, n_items, n_dev, cap)
+        ana_msgs, ana_drops = _analytic_counts(dest, n_items, fab, cap)
         ok = (exe_msgs == ana_msgs) and (exe_drops == ana_drops)
         out.append({
             "point_id": check.get("point_id", ""),

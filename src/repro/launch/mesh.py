@@ -15,47 +15,65 @@ from typing import Optional
 from ..configs.base import ArchConfig
 from ..core.compat import make_mesh as _mk  # noqa: F401 (re-exported idiom)
 from ..core.dispatch import MeshInfo
+from ..core.fabric import Fabric
+
+
+def make_production_fabric(*, multi_pod: bool = False) -> Fabric:
+    """The contract fabric: a 256-chip pod (16x16) or two pods
+    (2x16x16, ``pod`` = the portal/DCN-crossing axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return Fabric.single(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return make_production_fabric(multi_pod=multi_pod).mesh
 
 
-def make_moe_mesh(*, multi_pod: bool = False):
+def make_moe_fabric(*, multi_pod: bool = False) -> Fabric:
     """model axis split into (expert, tp) for expert-parallel archs."""
     shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
     axes = (("pod", "data", "expert", "tp") if multi_pod
             else ("data", "expert", "tp"))
-    return _mk(shape, axes)
+    return Fabric.single(shape, axes)
+
+
+def make_moe_mesh(*, multi_pod: bool = False):
+    return make_moe_fabric(multi_pod=multi_pod).mesh
+
+
+def fabric_for(cfg: ArchConfig, *, multi_pod: bool = False) -> Fabric:
+    if cfg.moe is not None:
+        return make_moe_fabric(multi_pod=multi_pod)
+    return make_production_fabric(multi_pod=multi_pod)
 
 
 def make_mesh_for(cfg: ArchConfig, *, multi_pod: bool = False):
-    if cfg.moe is not None:
-        return make_moe_mesh(multi_pod=multi_pod)
-    return make_production_mesh(multi_pod=multi_pod)
+    return fabric_for(cfg, multi_pod=multi_pod).mesh
 
 
 def mesh_info_for(cfg: ArchConfig, mesh, hierarchical: bool = True
                   ) -> Optional[MeshInfo]:
-    names = mesh.axis_names
+    fab = Fabric.of(mesh)                       # mesh OR Fabric
     if cfg.moe is None:
         return None
     return MeshInfo(
-        mesh=mesh,
+        mesh=fab.mesh,
         data_axis="data",
         expert_axis="expert",
         tp_axis="tp",
-        pod_axis="pod" if "pod" in names else None,
+        pod_axis="pod" if "pod" in fab.axis_names else None,
         hierarchical=hierarchical,
     )
 
 
 def model_axes(mesh) -> tuple:
-    """The tensor-parallel axis group of this mesh ('model' or expert+tp)."""
-    return (("model",) if "model" in mesh.axis_names else ("expert", "tp"))
+    """The tensor-parallel axis group ('model' or expert+tp); accepts a
+    mesh or a Fabric."""
+    names = Fabric.of(mesh).axis_names
+    return ("model",) if "model" in names else ("expert", "tp")
 
 
 def batch_axes(mesh) -> tuple:
-    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    names = Fabric.of(mesh).axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

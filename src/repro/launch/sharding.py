@@ -6,7 +6,6 @@ fallback to replication, so ANY (arch x shape x mesh) cell lowers.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -18,12 +17,8 @@ from .mesh import batch_axes, model_axes
 
 
 def _axsize(mesh, axes) -> int:
-    if axes is None:
-        return 1
-    if isinstance(axes, str):
-        axes = (axes,)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return math.prod(sizes[a] for a in axes)
+    from ..core.fabric import Fabric
+    return Fabric.of(mesh).axis_size(axes)
 
 
 def best_spec(mesh, shape, prefs) -> P:

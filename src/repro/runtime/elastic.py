@@ -1,9 +1,12 @@
-"""Elastic rescaling: move training state between meshes ("repackaging").
+"""Elastic rescaling: move training state between fabrics ("repackaging").
 
 Because checkpoints are mesh-agnostic (host numpy + target shardings), a
-rescale is: save on mesh A -> build mesh B + its shardings -> restore. This
-module provides the one-call wrapper plus a pure in-memory reshard for
-tests (no filesystem round-trip).
+rescale is: save on fabric A -> ``Fabric.resize()`` to fabric B -> build
+B's shardings -> restore. This module provides the one-call wrapper plus a
+pure in-memory reshard for tests (no filesystem round-trip), and
+:func:`rescale` — the ``Fabric.resize()`` consumer that moves a live tree
+onto the resized fabric so a changed host set degrades capacity instead of
+killing the run.
 """
 from __future__ import annotations
 
@@ -15,10 +18,30 @@ from ..checkpoint import checkpoint as ckpt
 
 
 def reshard(tree: Any, shardings: Any) -> Any:
-    """In-memory mesh-to-mesh move (host round-trip, correct for any pair)."""
+    """In-memory mesh-to-mesh move (host round-trip, correct for any pair).
+
+    Leaves whose current sharding already equals the target are returned
+    as-is — no ``device_get`` round-trip on the unchanged path (asserted
+    in tests/test_fabric.py), which is what makes a mostly-overlapping
+    elastic rescale cheap.
+    """
     def one(x, sh):
+        if getattr(x, "sharding", None) == sh:
+            return x
         return jax.device_put(jax.device_get(x), sh)
     return jax.tree.map(one, tree, shardings)
+
+
+def rescale(tree: Any, fabric, pspecs: Any) -> Any:
+    """Move ``tree`` onto ``fabric`` (typically a ``Fabric.resize()``
+    result): each leaf's PartitionSpec from ``pspecs`` is bound to the
+    fabric's mesh and resharded (no-op leaves skipped)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from ..core.fabric import Fabric
+    mesh = Fabric.of(fabric).mesh
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                             is_leaf=lambda s: isinstance(s, PartitionSpec))
+    return reshard(tree, shardings)
 
 
 def rescale_from_checkpoint(ckpt_dir: str, step: int, target_state: Any,

@@ -88,7 +88,10 @@ class Response:
 
 
 class ProgramServer:
-    """Resident serving engine over one mesh + graph registry.
+    """Resident serving engine over one fabric + graph registry.
+
+    ``fabric`` is a :class:`repro.core.fabric.Fabric`; raw meshes keep
+    working through the warn-once shim (identical compile-cache keys).
 
     ``tenant_queues`` maps tenant -> :class:`QueueConfig` admission
     budget (``default_queues`` covers the rest; ``None`` = unbounded
@@ -119,7 +122,8 @@ class ProgramServer:
     Responses are one-to-one with submitted requests in every path.
     """
 
-    def __init__(self, mesh, graphs: Dict[str, CSR], *, axis: str = "data",
+    def __init__(self, fabric, graphs: Dict[str, CSR], *,
+                 axis: str = "data",
                  batch_width: int = 4,
                  tenant_queues: Optional[Dict[str, QueueConfig]] = None,
                  default_queues: Optional[QueueConfig] = None,
@@ -136,7 +140,9 @@ class ProgramServer:
         else:
             self.options = LaunchOptions(axis=axis,
                                          queues=launch_queues).resolve()
-        self.mesh = mesh
+        from ..core.fabric import as_fabric
+        self.fabric = as_fabric(fabric)     # raw Mesh -> warn-once shim
+        self.mesh = self.fabric.mesh        # kept for the MoE lane
         self.axis = self.options.axis
         self.graphs = dict(graphs)
         self.batch_width = int(batch_width)
@@ -148,7 +154,7 @@ class ProgramServer:
         self.stats = ServingStats()
         self._queue: Deque[Request] = deque()
         self._inflight_demand: Dict[str, int] = {}
-        self._n_dev = mesh.devices.size
+        self._n_dev = self.fabric.n_devices
 
     # ---- admission -------------------------------------------------------
 
@@ -248,7 +254,7 @@ class ProgramServer:
             for gname in (graphs if graphs is not None else self.graphs):
                 tg = tenant_graph(self.graphs[gname], self.batch_width)
                 keys = prewarm_program(
-                    prog, tg, self.mesh, options=self.options,
+                    prog, tg, self.fabric, options=self.options,
                     max_rounds=self.max_rounds,
                     params={"roots": (0,) * self.batch_width})
                 out[(name, gname)] = keys
@@ -317,7 +323,7 @@ class ProgramServer:
         t0 = time.perf_counter()
         try:
             (state,), app_stats = run_program(
-                prog, tg, self.mesh, options=self.options,
+                prog, tg, self.fabric, options=self.options,
                 max_rounds=self.max_rounds,
                 params={"roots": batch.roots})
         except Exception as e:  # noqa: BLE001 — a failed launch must not
@@ -429,10 +435,11 @@ class MoEService:
 
     def _dispatch_block(self, x: np.ndarray, mesh):
         from ..core.compat import set_mesh
+        from ..core.fabric import Fabric
         if self._fn is None:
             self._fn = self._build()
         before = self.traces
-        with set_mesh(mesh):
+        with set_mesh(Fabric.of(mesh).mesh):   # mesh OR Fabric
             out, _aux = self._fn(self.params, x)
         self.calls += 1
         return np.asarray(out), self.traces == before

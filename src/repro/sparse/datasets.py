@@ -18,12 +18,10 @@ from .csr import CSR, from_edges
 A, B, C = 0.57, 0.19, 0.19
 
 
-def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
-         undirected: bool = True) -> CSR:
-    """RMAT-<scale>: 2**scale vertices, edge_factor * V edges (pre-dedup)."""
-    rng = np.random.default_rng(seed)
-    V = 1 << scale
-    E = V * edge_factor
+def _rmat_pairs(scale: int, E: int, rng) -> tuple:
+    """``E`` raw RMAT (src, dst) pairs from ``rng`` — the quadrant-walk
+    inner loop shared by :func:`rmat` (one rng for everything, legacy
+    sequence preserved) and :func:`rmat_edge_chunk` (one rng per chunk)."""
     src = np.zeros(E, np.int64)
     dst = np.zeros(E, np.int64)
     for bit in range(scale):
@@ -32,6 +30,16 @@ def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
         col = ((u >= A) & (u < A + B)) | (u >= A + B + C)   # TR or BR
         src = (src << 1) | row
         dst = (dst << 1) | col
+    return src, dst
+
+
+def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
+         undirected: bool = True) -> CSR:
+    """RMAT-<scale>: 2**scale vertices, edge_factor * V edges (pre-dedup)."""
+    rng = np.random.default_rng(seed)
+    V = 1 << scale
+    E = V * edge_factor
+    src, dst = _rmat_pairs(scale, E, rng)
     # permute vertex ids to break the RMAT ordering artefact (Graph500)
     perm = rng.permutation(V)
     src, dst = perm[src], perm[dst]
@@ -45,6 +53,92 @@ def rmat(scale: int, edge_factor: int = 16, seed: int = 1,
     src, dst = src[idx], dst[idx]
     w = (rng.integers(1, 256, len(src))).astype(np.float32)
     return from_edges(V, src, dst, w)
+
+
+# ---------------------------------------------------------------------------
+# sharded ingest — no host ever materializes the full edge list
+# ---------------------------------------------------------------------------
+# NOTE: this module stays numpy-only (importable before jax init, the
+# XLA_FLAGS rigs depend on that), so the balanced-slice arithmetic is
+# deliberately duplicated from ``Fabric.host_slice`` instead of imported —
+# ``repro.core`` pulls in jax at package import.
+
+def _balanced_slice(total: int, rank: int, world: int) -> tuple:
+    base, rem = divmod(int(total), int(world))
+    lo = rank * base + min(rank, rem)
+    return lo, lo + base + (1 if rank < rem else 0)
+
+
+def rmat_edge_chunk(scale: int, chunk_id: int, n_chunks: int,
+                    edge_factor: int = 16, seed: int = 1) -> tuple:
+    """One chunk of a chunked RMAT-<scale> edge stream: directed
+    ``(src, dst, w)`` arrays for chunk ``chunk_id`` of ``n_chunks``.
+
+    Each chunk draws from its own ``SeedSequence((seed, chunk_id))`` rng,
+    so the *global edge multiset* (the union over all chunks) is a pure
+    function of ``(scale, edge_factor, seed, n_chunks)`` and independent
+    of which host generates which chunk — the property the multi-host
+    ingest parity test pins. The Graph500 vertex permutation comes from
+    the plain ``seed`` rng so every chunk relabels identically.
+    Self-loops are dropped per chunk; there is NO global dedup (chunked
+    ingest is multigraph ingest — ``from_edges`` accumulates parallel
+    edges).
+    """
+    V = 1 << scale
+    E = V * edge_factor
+    lo, hi = (chunk_id * E) // n_chunks, ((chunk_id + 1) * E) // n_chunks
+    rng = np.random.default_rng(np.random.SeedSequence((seed, chunk_id)))
+    src, dst = _rmat_pairs(scale, hi - lo, rng)
+    perm = np.random.default_rng(seed).permutation(V)
+    src, dst = perm[src], perm[dst]
+    w = rng.integers(1, 256, len(src)).astype(np.float32)
+    keep = src != dst
+    return src[keep], dst[keep], w[keep]
+
+
+def ingest_edges(scale: int, edge_factor: int = 16, seed: int = 1, *,
+                 n_chunks: int = 16, fabric=None,
+                 rank: Optional[int] = None, world: Optional[int] = None,
+                 undirected: bool = True) -> tuple:
+    """This host's share of a chunked RMAT edge stream: ``(src, dst, w)``.
+
+    The ``n_chunks`` chunks are split contiguously and near-evenly over
+    the participating hosts — via ``fabric.host_slice`` (a
+    :class:`repro.core.fabric.Fabric`, duck-typed so this module stays
+    jax-free) when given, else via explicit ``rank`` / ``world``
+    (defaulting to the whole range). No host ever materializes the
+    edges outside its slice. ``undirected`` mirrors each local chunk
+    (both directions stay host-local, so the global multiset is still
+    chunking-independent).
+    """
+    if fabric is not None:
+        lo, hi = fabric.host_slice(n_chunks, rank=rank, world=world)
+    else:
+        lo, hi = _balanced_slice(n_chunks, int(rank or 0), int(world or 1))
+    parts = [rmat_edge_chunk(scale, c, n_chunks, edge_factor, seed)
+             for c in range(lo, hi)]
+    if parts:
+        src = np.concatenate([p[0] for p in parts])
+        dst = np.concatenate([p[1] for p in parts])
+        w = np.concatenate([p[2] for p in parts])
+    else:                                   # more hosts than chunks
+        src = np.zeros(0, np.int64)
+        dst = np.zeros(0, np.int64)
+        w = np.zeros(0, np.float32)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    return src, dst, w
+
+
+def ingest_graph(scale: int, edge_factor: int = 16, seed: int = 1, *,
+                 n_chunks: int = 16, undirected: bool = True) -> CSR:
+    """The full chunked-ingest graph on one host (multigraph CSR —
+    parallel edges accumulate; the single-host reference the sharded
+    parity tests compare against)."""
+    src, dst, w = ingest_edges(scale, edge_factor, seed, n_chunks=n_chunks,
+                               undirected=undirected)
+    return from_edges(1 << scale, src, dst, w)
 
 
 def erdos_renyi(n: int, avg_degree: float = 8.0, seed: int = 5,

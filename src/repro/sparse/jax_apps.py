@@ -17,6 +17,11 @@ Layouts mirror DCRA's cyclic PGAS: vertex ``v`` lives on device
 owner of their *source* vertex so reading the frontier value is tile-local
 and only the per-edge update crosses the NoC (tasks ``(dest, value)`` with
 bounded input queues; overflow dropped and counted).
+
+Every app's ``mesh`` argument accepts a :class:`repro.core.fabric.Fabric`
+(single-process, fake-device rig or multi-process ``jax.distributed``) or
+a raw ``jax.sharding.Mesh`` (deprecated, warn-once shim) — identical
+compile-cache keys and bit-identical results either way.
 """
 from __future__ import annotations
 

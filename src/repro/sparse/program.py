@@ -9,8 +9,8 @@ reduce op, frontier-update rule, convergence predicate, task class — and
 
 * ``config=`` launch resolution and the kwargs-conflict checks;
 * :class:`~repro.core.queues.QueueConfig` capacity resolution + clamping
-  (via the shared :func:`~repro.core.routing.resolve_flat_cap` /
-  :func:`~repro.core.routing.resolve_hier_caps`);
+  (via the shared :func:`~repro.core.routing.resolve_caps` against the
+  launch :class:`~repro.core.fabric.Fabric`);
 * flat vs pod/portal path selection (iterative apps route hierarchically
   now, not just the one-round scatters);
 * the cyclic owner layout pack/unpack;
@@ -43,12 +43,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map_unchecked
+from ..core.fabric import Fabric, as_fabric
 from ..core.queues import QueueConfig
 from ..core.routing import (local_route_reduce, owner_route,
                             owner_route_finish, owner_route_hier,
                             owner_route_hier_start, owner_route_start,
-                            reduce_received, resolve_flat_cap,
-                            resolve_hier_caps, resolve_route_impl)
+                            reduce_received, resolve_caps,
+                            resolve_flat_cap, resolve_hier_caps,
+                            resolve_route_impl)
 from .options import LaunchOptions, resolve_options
 from ..core.task_engine import (EngineConfig, RoundStats, RunStats,
                                 TaskEngine)
@@ -302,8 +304,37 @@ def _graph_caps(queues: QueueConfig, task: str,  # noqa: PLR0917
     return resolve_hier_caps(queues, task, e_local, n_intra, n_pods)
 
 
-def _axis_sizes(mesh):
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+# ---------------------------------------------------------------------------
+# multi-process I/O adapters (no-ops on every single-process fabric)
+# ---------------------------------------------------------------------------
+
+def _to_global(fab: Fabric, spec, arr):
+    """Lay a host-global array out on the fabric's mesh.
+
+    Single-process fabrics feed jit with plain (jnp-converted) arrays —
+    unchanged, byte-identical path. On a multi-process fabric a host
+    numpy array cannot feed a global-mesh jit directly, so wrap it with
+    ``make_array_from_callback``: every process holds the same global
+    values (the packed inputs are deterministic from the seed), and each
+    callback slices out the shards this process owns.
+    """
+    if not fab.is_multiprocess:
+        return jnp.asarray(arr)
+    from jax import make_array_from_callback
+    from jax.sharding import NamedSharding
+    a = np.asarray(arr)
+    return make_array_from_callback(
+        a.shape, NamedSharding(fab.mesh, spec), lambda idx: a[idx])
+
+
+def _host_gather(fab: Fabric, x):
+    """One sharded output back to every host, as numpy (global order).
+    Single-process: plain pass-through (no extra host copy — callers keep
+    operating on the sharded jax array exactly as before)."""
+    if not fab.is_multiprocess:
+        return x
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
 
 
 # ---------------------------------------------------------------------------
@@ -327,9 +358,10 @@ def clear_cache() -> None:
         CACHE_STATS[k] = 0
 
 
-def _mesh_key(mesh):
-    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
-            tuple(d.id for d in mesh.devices.flat))
+def _mesh_key(mesh_or_fabric):
+    """Legacy alias — the cache identity now lives on the fabric
+    (:meth:`repro.core.fabric.Fabric.fabric_key`, byte-compatible)."""
+    return Fabric.of(mesh_or_fabric).fabric_key()
 
 
 def _cached(key, build):
@@ -348,10 +380,10 @@ def cache_keys() -> Tuple[tuple, ...]:
     return tuple(_CACHE)
 
 
-def prewarm_program(prog: TaskProgram, data, mesh, **kwargs) -> Tuple[tuple,
-                                                                      ...]:
+def prewarm_program(prog: TaskProgram, data, fabric, **kwargs) -> Tuple[
+        tuple, ...]:
     """Trace + compile the jitted callable(s) for one (program,
-    shape-class, mesh) before real traffic arrives.
+    shape-class, fabric) before real traffic arrives.
 
     Runs one throwaway launch — jit compiles on first execution, so the
     throwaway run IS the warm-up — and returns the cache keys it
@@ -361,7 +393,7 @@ def prewarm_program(prog: TaskProgram, data, mesh, **kwargs) -> Tuple[tuple,
     the same shape class.
     """
     before = set(_CACHE)
-    run_program(prog, data, mesh, **kwargs)
+    run_program(prog, data, fabric, **kwargs)
     return tuple(k for k in _CACHE if k not in before)
 
 
@@ -369,7 +401,7 @@ def prewarm_program(prog: TaskProgram, data, mesh, **kwargs) -> Tuple[tuple,
 # the one-round owner-routed scatter (stream programs; public API)
 # ---------------------------------------------------------------------------
 
-def dcra_scatter(dest, vals, n, mesh, axis="data", *,  # noqa: PLR0917
+def dcra_scatter(dest, vals, n, fabric, axis="data", *,  # noqa: PLR0917
                  options: Optional[LaunchOptions] = None,
                  op="add", capacity_factor: Optional[float] = None,
                  pod_axis=None, cap: Optional[int] = None,
@@ -395,7 +427,10 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", *,  # noqa: PLR0917
     revalidation sweeps the IQ axis in queue entries, so rounding would
     validate a different capacity than the analytic model swept);
     factor-derived capacities keep the lane-aligned round8. Compiled
-    kernels are cached by (shapes, mesh, capacities, op, route impl).
+    kernels are cached by (shapes, fabric key, capacities, op, route
+    impl). ``fabric`` is a :class:`~repro.core.fabric.Fabric` (raw
+    meshes keep working through the warn-once shim, with the identical
+    cache key — :meth:`~repro.core.fabric.Fabric.fabric_key`).
 
     ``route_impl`` picks the routing hot-path engine ("pallas" | "sort" |
     "onehot"; None = ``queues.route_impl`` or the backend-autodetected
@@ -413,7 +448,8 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", *,  # noqa: PLR0917
                            route_impl=route_impl, round_mode=round_mode)
     axis, pod_axis = opts.axis, opts.pod_axis
     queues, route_impl = opts.queues, opts.route_impl
-    n_dev = mesh.devices.size
+    fab = as_fabric(fabric)
+    n_dev = fab.n_devices
     e_local = dest.shape[0] // n_dev
     n_local = -(-n // n_dev)
     if queues is None:
@@ -422,25 +458,16 @@ def dcra_scatter(dest, vals, n, mesh, axis="data", *,  # noqa: PLR0917
                   else QueueConfig.from_factor(
                       1.5 if opts.capacity_factor is None
                       else opts.capacity_factor, task))
-    explicit = queues.iq_sizes.get(task, None)
-    if explicit is not None and pod_axis is not None:
-        raise ValueError("explicit cap is only defined for the flat path")
-
-    if pod_axis is None:
-        caps = (resolve_flat_cap(queues, task, e_local, n_dev),)
-        pods = None
-    else:
-        sizes = _axis_sizes(mesh)
-        pods = (sizes[axis], sizes[pod_axis])
-        caps = resolve_hier_caps(queues, task, e_local, *pods)
+    caps, pods = resolve_caps(fab, queues, task, e_local, axis, pod_axis)
     impl = resolve_route_impl(route_impl if route_impl is not None
                               else queues.route_impl)
 
     key = ("scatter", op, n_local, n_dev, axis, pod_axis, pods, caps, impl,
-           _mesh_key(mesh), int(dest.shape[0]))
+           fab.fabric_key(), int(dest.shape[0]))
     fn = _cached(key, lambda: _build_scatter_fn(
-        mesh, axis, pod_axis, pods, n_dev, n_local, caps, op, impl))
-    return fn(dest, vals)
+        fab.mesh, axis, pod_axis, pods, n_dev, n_local, caps, op, impl))
+    spec = P((pod_axis, axis)) if pod_axis else P(axis)
+    return fn(_to_global(fab, spec, dest), _to_global(fab, spec, vals))
 
 
 def _build_scatter_fn(mesh, axis, pod_axis, pods,  # noqa: PLR0917
@@ -483,7 +510,7 @@ def _build_scatter_fn(mesh, axis, pod_axis, pods,  # noqa: PLR0917
 # the runtime
 # ---------------------------------------------------------------------------
 
-def run_program(prog: TaskProgram, data, mesh, *,
+def run_program(prog: TaskProgram, data, fabric, *,
                 options: Optional[LaunchOptions] = None,
                 axis="data", pod_axis=None,
                 capacity_factor: Optional[float] = None,
@@ -494,11 +521,16 @@ def run_program(prog: TaskProgram, data, mesh, *,
                 max_rounds: Optional[int] = None, seed: int = 0,
                 dataset=None, route_impl: Optional[str] = None,
                 round_mode: Optional[str] = None):
-    """Execute a :class:`TaskProgram` on ``mesh``.
+    """Execute a :class:`TaskProgram` on ``fabric``.
 
     Graph programs return ``(state_arrays, AppStats)`` — each state array
     unpacked to global order as float64; stream programs return
-    ``(y_global, AppStats)`` with a single round. ``dataset`` overrides
+    ``(y_global, AppStats)`` with a single round. ``fabric`` is a
+    :class:`~repro.core.fabric.Fabric` (single-process, fake-device rig
+    or multi-process ``jax.distributed`` — on a multi-process fabric the
+    packed inputs are laid out globally and the unpacked states gathered
+    back, same numbers); raw meshes keep working through the warn-once
+    shim with the identical compile-cache key. ``dataset`` overrides
     what ``config="auto"`` signatures (defaults to ``data``).
     ``route_impl`` picks the routing hot-path engine ("pallas" | "sort" |
     "onehot"; None = ``queues.route_impl`` or backend autodetect) — part
@@ -523,13 +555,14 @@ def run_program(prog: TaskProgram, data, mesh, *,
     params = dict(params or {})
     lc = resolve_launch(config, data if dataset is None else dataset,
                         prog.name, objective)
-    n_dev = mesh.devices.size
+    fab = as_fabric(fabric)
+    n_dev = fab.n_devices
 
     if prog.mode == "single":
         dest, vals, n_items = prog.stream(data, params, n_dev, seed)
         if lc is not None:
             pod_axis = (pod_axis if pod_axis is not None
-                        else lc.pod_axis_for(mesh))
+                        else lc.pod_axis_for(fab))
             queues = lc.device_queues(n_dev, len(dest) // n_dev,
                                       pod=pod_axis is not None)
         if queues is None:
@@ -551,7 +584,7 @@ def run_program(prog: TaskProgram, data, mesh, *,
                         drops=np.array([0], np.int64))
                     return y, stats
         y_sh, dropped = dcra_scatter(
-            jnp.asarray(dest), jnp.asarray(vals), n_items, mesh,
+            jnp.asarray(dest), jnp.asarray(vals), n_items, fab,
             options=LaunchOptions(axis=axis, pod_axis=pod_axis,
                                   queues=queues, route_impl=route_impl),
             op=prog.reduce_op, task=prog.task)
@@ -559,7 +592,8 @@ def run_program(prog: TaskProgram, data, mesh, *,
                          messages=np.array([int((dest >= 0).sum())],
                                            np.int64),
                          drops=np.array([int(dropped)], np.int64))
-        return from_owner_layout(y_sh, n_items, n_dev), stats
+        return from_owner_layout(_host_gather(fab, y_sh), n_items,
+                                 n_dev), stats
 
     # ---- graph program ---------------------------------------------------
     g = data
@@ -568,16 +602,12 @@ def run_program(prog: TaskProgram, data, mesh, *,
         g, n_dev, undirected=prog.undirected, seed=seed)
     if lc is not None:
         pod_axis = (pod_axis if pod_axis is not None
-                    else lc.pod_axis_for(mesh))
+                    else lc.pod_axis_for(fab))
         queues = lc.device_queues(n_dev, E_max, pod=pod_axis is not None)
     if queues is None:
         queues = _resolve_queues(prog, None, cap, capacity_factor)
-    if pod_axis is None:
-        pods = None
-    else:
-        sizes = _axis_sizes(mesh)
-        pods = (sizes[axis], sizes[pod_axis])
-    caps = _graph_caps(queues, prog.task, E_max, n_dev, pods)
+    caps, pods = resolve_caps(fab, queues, prog.task, E_max, axis,
+                              pod_axis, clamp=True)
     impl = resolve_route_impl(route_impl if route_impl is not None
                               else queues.route_impl)
 
@@ -598,14 +628,17 @@ def run_program(prog: TaskProgram, data, mesh, *,
         round_mode = "lockstep"          # no rounds, nothing to overlap
     key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
            impl, rounds, round_mode, len(packed),
-           tuple(sorted(kparams.items())), _mesh_key(mesh))
+           tuple(sorted(kparams.items())), fab.fabric_key())
     fn = _cached(key, lambda: _build_graph_fn(
-        prog, mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
+        prog, fab.mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
         kparams, rounds, len(packed), impl, round_mode=round_mode))
-    out = fn(src_slot, dst, w, *packed)
+    spec = P((pod_axis, axis)) if pod_axis else P(axis)
+    out = fn(*(_to_global(fab, spec, a)
+               for a in (src_slot, dst, w) + packed))
     states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
     stats = _collect_stats(r, msgs, drops)
-    states_np = tuple(np.asarray(from_owner_layout(s, n, n_dev), np.float64)
+    states_np = tuple(np.asarray(from_owner_layout(_host_gather(fab, s),
+                                                   n, n_dev), np.float64)
                       for s in states)
     return states_np, stats
 

@@ -46,11 +46,13 @@ def _mesh1():
 def test_legacy_kwargs_and_options_share_one_cache_entry():
     """The shim is an alias, not a fork: same key, same jitted callable,
     bit-identical result."""
+    from repro.core import fabric as fab_mod
     from repro.sparse import LaunchOptions, options as opt_mod, program
     from repro.sparse.jax_apps import dcra_bfs
     g, mesh = _tiny(), _mesh1()
     program.clear_cache()
     opt_mod._WARNED[0] = False
+    fab_mod._WARNED[0] = True   # isolate the kwarg shim from the mesh shim
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         d1, s1 = dcra_bfs(g, 0, mesh, capacity_factor=2.0)
