@@ -4,16 +4,26 @@ Drives the :class:`repro.serve.engine.ProgramServer` with a synthetic
 multi-tenant request stream (BFS + SSSP roots over resident graphs),
 after a one-shot pre-warm of every (program, graph, width) shape class,
 and reports the serving metrics: request throughput, per-tenant p50/p99
-latency, compile-cache hit rate, fused-launch count, padding overhead,
-and the NoC-drop ledger.
+latency — decomposed into **queue-wait** (submit -> launch) and **device
+time** (launch -> harvest) — compile-cache hit rate, fused-launch count,
+padding overhead, and the NoC-drop ledger.
 
-``--smoke`` is the CI leg: a short stream that *asserts* the serving
-invariants (>= 1 compile-cache hit after warm-up, zero kernel re-traces
-under load, zero unaccounted drops, results bit-identical to a
-standalone launch) and prints ``RESULT ok``.
+``--depth`` sets ``ServeOptions.inflight_depth``: at depth k the server
+keeps k fused launches in flight (JAX async dispatch) and forms batch
+k+1 while batch k computes. ``--smoke`` is the CI leg: a short stream
+that *asserts* the serving invariants (>= 1 compile-cache hit after
+warm-up, zero kernel re-traces under load, zero unaccounted drops,
+results bit-identical to a standalone launch) and prints ``RESULT ok``;
+with ``--depth k > 1`` it additionally runs the same stream at depth 1
+and asserts the overlapped responses are bit-identical (results,
+statuses, reasons, per-tenant ledger). ``--bench-out BENCH_serve.json``
+measures the synchronous drain vs the overlapped drain on one stream and
+writes the ``dcra-serve-bench/v1`` trajectory artifact gated by
+:mod:`repro.dse.serve_compare`.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--devices 8]
-      [--requests 48] [--tenants 6] [--smoke] [--fabric]
+      [--requests 48] [--tenants 6] [--depth 3] [--fairness drr]
+      [--donate] [--smoke] [--fabric] [--bench-out BENCH_serve.json]
 
 ``--fabric`` drives the whole bench through the :class:`repro.core.fabric`
 launch surface (``Fabric.fake`` -> ``ProgramServer(fabric, ...)``) instead
@@ -39,12 +49,14 @@ if (__name__ == "__main__"
                                ).strip()
 
 import argparse      # noqa: E402
+import json          # noqa: E402
 import time          # noqa: E402
 
 import numpy as np   # noqa: E402
 
 from repro.core.compat import make_mesh                      # noqa: E402
-from repro.serve import ProgramServer, Request, STATUS_OK    # noqa: E402
+from repro.serve import (ProgramServer, Request,             # noqa: E402
+                         STATUS_OK, ServeOptions)
 from repro.sparse import datasets                            # noqa: E402
 from repro.sparse import program as program_mod              # noqa: E402
 from repro.sparse.jax_apps import BFS, SSSP                  # noqa: E402
@@ -54,6 +66,7 @@ from .common import emit                                     # noqa: E402
 
 PROGRAMS = ("bfs", "sssp")
 STANDALONE = {"bfs": BFS, "sssp": SSSP}
+BENCH_SCHEMA = "dcra-serve-bench/v1"
 
 
 def make_stream(graphs, tenants: int, requests: int, seed: int = 0):
@@ -73,6 +86,64 @@ def make_stream(graphs, tenants: int, requests: int, seed: int = 0):
     return reqs
 
 
+def serve_stream(mesh, graphs, stream, width, serve_options):
+    """Pre-warm + run one stream on a fresh server; returns the server
+    and the timing/trace envelope."""
+    server = ProgramServer(mesh, graphs, batch_width=width,
+                           serve_options=serve_options)
+    t0 = time.perf_counter()
+    server.prewarm(PROGRAMS)
+    warm_s = time.perf_counter() - t0
+    traces0 = program_mod.cache_stats()["kernel_traces"]
+    t0 = time.perf_counter()
+    responses = server.run(stream)
+    serve_s = time.perf_counter() - t0
+    new_traces = program_mod.cache_stats()["kernel_traces"] - traces0
+    server.stats.verify()
+    return server, responses, warm_s, serve_s, new_traces
+
+
+def _quant(xs, q):
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))]
+
+
+def bench_row(mode, opts, responses, serve_s, new_traces, snap):
+    """One dcra-serve-bench/v1 row: throughput + the latency split."""
+    ok = [r for r in responses if r.status == STATUS_OK]
+    return {
+        "mode": mode, "depth": opts.inflight_depth,
+        "fairness": opts.fairness, "donate": opts.donate_buffers,
+        "serve_s": serve_s,
+        "throughput_rps": len(responses) / serve_s if serve_s else 0.0,
+        "p50_latency_s": _quant([r.latency_s for r in ok], 0.50),
+        "p99_latency_s": _quant([r.latency_s for r in ok], 0.99),
+        "p50_queue_wait_s": _quant([r.queue_wait_s for r in ok], 0.50),
+        "p99_queue_wait_s": _quant([r.queue_wait_s for r in ok], 0.99),
+        "p50_device_s": _quant([r.device_s for r in ok], 0.50),
+        "p99_device_s": _quant([r.device_s for r in ok], 0.99),
+        "launches": snap["launches"],
+        "cache_hit_rate": snap["cache_hit_rate"],
+        "re_traces": new_traces,
+    }
+
+
+def _signature(responses):
+    """The bit-identity signature: results, statuses, reasons — and
+    nothing wall-clock."""
+    return [(r.req_id, r.tenant, r.status, r.retriable, r.reason,
+             None if r.result is None else r.result.tobytes(),
+             r.batch_drops, r.batch_messages, r.rounds, r.batch_width)
+            for r in sorted(responses, key=lambda r: r.req_id)]
+
+
+def _ledger(server):
+    return {t: (s.submitted, s.served, s.rejected, s.failed)
+            for t, s in server.stats.tenants.items()}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8,
@@ -82,11 +153,20 @@ def main(argv=None) -> None:
     ap.add_argument("--width", type=int, default=4,
                     help="tenant columns per fused launch")
     ap.add_argument("--vertices", type=int, default=192)
+    ap.add_argument("--depth", type=int, default=1,
+                    help="inflight window depth (1 = synchronous drain)")
+    ap.add_argument("--fairness", choices=("fifo", "drr"), default="fifo")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate retired batch state buffers to the next "
+                         "launch of the shape class")
     ap.add_argument("--smoke", action="store_true",
                     help="short CI stream; assert serving invariants")
     ap.add_argument("--fabric", action="store_true",
                     help="launch through the Fabric surface instead of a "
                          "raw Mesh")
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="measure sync vs overlapped drain and write the "
+                         "dcra-serve-bench/v1 artifact")
     args = ap.parse_args(argv)
     if args.smoke:
         args.tenants = min(args.tenants, 4)
@@ -103,27 +183,61 @@ def main(argv=None) -> None:
         "wiki": datasets.wiki_like(args.vertices, avg_degree=6, seed=3),
         "er": datasets.erdos_renyi(args.vertices, avg_degree=4, seed=7),
     }
-    server = ProgramServer(mesh, graphs, batch_width=args.width)
-
-    t0 = time.perf_counter()
-    server.prewarm(PROGRAMS)
-    warm_s = time.perf_counter() - t0
-    traces0 = program_mod.cache_stats()["kernel_traces"]
-
+    opts = ServeOptions(inflight_depth=args.depth, fairness=args.fairness,
+                        donate_buffers=args.donate)
     stream = make_stream(graphs, args.tenants, args.requests)
-    t0 = time.perf_counter()
-    responses = server.run(stream)
-    serve_s = time.perf_counter() - t0
-    new_traces = program_mod.cache_stats()["kernel_traces"] - traces0
 
-    server.stats.verify()
+    if args.bench_out:
+        # sync vs overlapped on the SAME stream — the trajectory artifact
+        sync_opts = ServeOptions(inflight_depth=1)
+        over_opts = ServeOptions(inflight_depth=max(2, args.depth),
+                                 fairness=args.fairness,
+                                 donate_buffers=args.donate)
+        rows = []
+        sigs = []
+        for mode, o in (("sync", sync_opts), ("overlapped", over_opts)):
+            srv, resp, _, serve_s, tr = serve_stream(
+                mesh, graphs, stream, args.width, o)
+            rows.append(bench_row(mode, o, resp, serve_s, tr,
+                                  srv.stats.snapshot()))
+            sigs.append(_signature(resp))
+        assert sigs[0] == sigs[1], \
+            "overlapped responses diverged from the synchronous drain"
+        speedup = rows[1]["throughput_rps"] / rows[0]["throughput_rps"]
+        bench = {
+            "schema": BENCH_SCHEMA,
+            "backend": jax.default_backend(),
+            "config": {"devices": n_dev, "width": args.width,
+                       "tenants": args.tenants, "requests": args.requests,
+                       "vertices": args.vertices,
+                       "depth": over_opts.inflight_depth,
+                       "fairness": over_opts.fairness,
+                       "donate": over_opts.donate_buffers},
+            "rows": rows,
+            "overlap_speedup": speedup,
+        }
+        with open(args.bench_out, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.bench_out}: overlapped "
+              f"{rows[1]['throughput_rps']:.1f} req/s vs sync "
+              f"{rows[0]['throughput_rps']:.1f} req/s "
+              f"({speedup:.2f}x, depth={over_opts.inflight_depth})")
+        return
+
+    server, responses, warm_s, serve_s, new_traces = serve_stream(
+        mesh, graphs, stream, args.width, opts)
     snap = server.stats.snapshot()
     rows = [(t, s["submitted"], s["served"], s["rejected"], s["failed"],
              f"{s['p50_latency_s'] * 1e3:.1f}",
-             f"{s['p99_latency_s'] * 1e3:.1f}")
+             f"{s['p99_latency_s'] * 1e3:.1f}",
+             f"{s['p50_queue_wait_s'] * 1e3:.1f}",
+             f"{s['p50_device_s'] * 1e3:.1f}")
             for t, s in sorted(snap["tenants"].items())]
-    emit(rows, "tenant,submitted,served,rejected,failed,p50_ms,p99_ms")
-    print(f"# devices={n_dev} width={args.width} "
+    emit(rows, "tenant,submitted,served,rejected,failed,p50_ms,p99_ms,"
+               "p50_wait_ms,p50_device_ms")
+    print(f"# devices={n_dev} width={args.width} depth={args.depth} "
+          f"fairness={args.fairness} "
           f"surface={'fabric' if args.fabric else 'mesh'} "
           f"prewarm={warm_s:.1f}s "
           f"serve={serve_s:.1f}s "
@@ -149,6 +263,16 @@ def main(argv=None) -> None:
                                 params={"root": stream[0].root})
         assert np.array_equal(np.asarray(r0.result), np.asarray(ref)), \
             "batched result != standalone"
+        if args.depth > 1:
+            # the overlapped leg: the same stream at depth 1 must produce
+            # bit-identical responses AND ledger, with zero re-traces
+            ref_srv, ref_resp, _, _, ref_traces = serve_stream(
+                mesh, graphs, stream, args.width, ServeOptions())
+            assert ref_traces == 0, f"{ref_traces} re-traces (sync leg)"
+            assert _signature(responses) == _signature(ref_resp), \
+                f"depth={args.depth} responses != synchronous drain"
+            assert _ledger(server) == _ledger(ref_srv), \
+                f"depth={args.depth} ledger != synchronous drain"
         print("RESULT ok")
 
 

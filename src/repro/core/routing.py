@@ -39,9 +39,9 @@ from .queues import round8  # noqa: F401
 # plain XLA off-TPU); "sort" is the argsort fallback below; "onehot" is
 # the legacy O(N*S) rank. Re-exported so call sites resolve the knob once.
 from ..kernels.route import (_on_tpu, bucket_rank,  # noqa: F401
-                             bucket_scatter_pallas, fused_kernels_enabled,
-                             onehot_rank, reduce_received_pallas,
-                             resolve_route_impl)
+                             bucket_scatter_pallas, bucket_sort_gather,
+                             fused_kernels_enabled, onehot_rank,
+                             reduce_received_pallas, resolve_route_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +173,12 @@ def bucket(x_tasks, dest, valid, aux_ints, n_buckets, cap, impl=None):
         if x_tasks.ndim == 1:
             xb = xb[:, 0]
         return xb, ints, task_slot, n_drop
+    if impl == "sort":
+        # the argsort already groups each bucket contiguously: build xb by
+        # gathering the first `cap` of each run instead of paying a second
+        # segment-sum scatter (bit-identical drop semantics)
+        return bucket_sort_gather(x_tasks, dest, valid, aux_ints,
+                                  n_buckets, cap)
     pos = positions_by_dest(dest, valid, n_buckets, impl=impl)
     keep = valid & (pos < cap)
     slot = dest * cap + jnp.minimum(pos, cap - 1)

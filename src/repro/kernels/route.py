@@ -190,6 +190,64 @@ def bucket_rank(dest: jax.Array, valid: jax.Array, n_buckets: int
 
 
 # ---------------------------------------------------------------------------
+# sort-impl bucketing: one argsort, then gathers — no segment-sum scatter
+# ---------------------------------------------------------------------------
+
+def bucket_sort_gather(x_tasks, dest, valid, aux_ints, n_buckets, cap):
+    """The whole ``bucket()`` contract off ONE stable argsort, with ``xb``
+    built by *gathering* from the sorted stream instead of scattering.
+
+    The sort path used to rank via argsort and then hand the kept tasks
+    to the generic ``segment_sum`` slot scatter — paying a second
+    O(N)-segment reduction just to materialize the bucket array. But the
+    argsort already placed bucket ``b``'s tasks contiguously: output slot
+    ``(b, p)`` is simply the task at sorted position
+    ``bucket_start[b] + p`` (when that run is long enough), so ``xb`` and
+    every aux column are plain gathers of shape O(n_buckets*cap) — the
+    ROADMAP follow-up from the PR 5 kernel tier. Drop semantics are
+    bit-identical to the one-hot path (first ``cap`` per channel in array
+    order — stable argsort preserves array order within a bucket),
+    differential-tested in tests/test_route_kernels.py.
+
+    Returns ``(xb [n_buckets*cap, D] (or [n_buckets*cap] for 1-D input),
+    ints, task_slot, n_drop)`` exactly like
+    :func:`repro.core.routing.bucket`.
+    """
+    n = dest.shape[0]
+    total = n_buckets * cap
+    squeeze = x_tasks.ndim == 1
+    x2 = x_tasks[:, None] if squeeze else x_tasks
+    if n == 0:
+        xb = jnp.zeros((total, x2.shape[1]), x2.dtype)
+        return (xb[:, 0] if squeeze else xb,
+                [jnp.full((total,), -1, jnp.int32) for _ in aux_ints],
+                jnp.zeros((0,), jnp.int32), jnp.int32(0))
+    # stable argsort by destination; invalid tasks sort to a sentinel
+    key = jnp.where(valid, dest.astype(jnp.int32), n_buckets)
+    order = jnp.argsort(key, stable=True)
+    ks = key[order]
+    run_start = jnp.searchsorted(ks, ks, side="left")
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - run_start.astype(jnp.int32)
+    pos = jnp.zeros(n, jnp.int32).at[order].set(pos_sorted)
+    # bucket run offsets -> slot (b, p) gathers sorted index start[b] + p
+    bins = jnp.arange(n_buckets, dtype=jnp.int32)
+    b_start = jnp.searchsorted(ks, bins, side="left")
+    b_end = jnp.searchsorted(ks, bins, side="right")
+    slot_b = jnp.repeat(bins, cap)                           # [total]
+    slot_p = jnp.tile(jnp.arange(cap, dtype=jnp.int32), n_buckets)
+    src_sorted = b_start[slot_b] + slot_p
+    filled = src_sorted < b_end[slot_b]
+    src = order[jnp.minimum(src_sorted, n - 1)]
+    xb = jnp.where(filled[:, None], x2[src], 0).astype(x2.dtype)
+    ints = [jnp.where(filled, a.astype(jnp.int32)[src], -1)
+            for a in aux_ints]
+    keep = valid & (pos < cap)
+    task_slot = jnp.where(keep, dest * cap + jnp.minimum(pos, cap - 1), -1)
+    n_drop = jnp.sum(valid & ~keep)
+    return (xb[:, 0] if squeeze else xb), ints, task_slot, n_drop
+
+
+# ---------------------------------------------------------------------------
 # fused bucket-scatter: rank + capacity test + slot scatter in one pass
 # ---------------------------------------------------------------------------
 

@@ -13,15 +13,17 @@ exports per-tenant serving stats (queue depth, cache hit rate, drops,
 p50/p99 round latency).
 """
 from ..sparse.options import LaunchOptions
-from .batching import (TenantBatch, batched_program, split_tenant_states,
-                       tenant_graph)
+from .batching import (DrrFormer, FifoFormer, TenantBatch, batched_program,
+                       split_tenant_states, tenant_graph)
 from .engine import (ADMISSION_TASK, MoEService, ProgramServer, Request,
                      Response, STATUS_FAILED, STATUS_OK, STATUS_REJECTED)
-from .stats import ServingStats, TenantStats
+from .options import ServeOptions
+from .stats import STATS_WINDOW, ServingStats, TenantStats
 
 __all__ = [
-    "ADMISSION_TASK", "LaunchOptions", "MoEService", "ProgramServer",
-    "Request", "Response", "ServingStats", "STATUS_FAILED", "STATUS_OK",
+    "ADMISSION_TASK", "DrrFormer", "FifoFormer", "LaunchOptions",
+    "MoEService", "ProgramServer", "Request", "Response", "ServeOptions",
+    "ServingStats", "STATS_WINDOW", "STATUS_FAILED", "STATUS_OK",
     "STATUS_REJECTED", "TenantBatch", "TenantStats", "batched_program",
     "split_tenant_states", "tenant_graph",
 ]

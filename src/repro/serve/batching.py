@@ -27,8 +27,9 @@ class -> ONE compile-cache entry, which is what the server pre-warms.
 from __future__ import annotations
 
 import weakref
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -94,6 +95,155 @@ def split_tenant_states(state: np.ndarray, n: int, n_tenants: int
     arrays (tenant t's value for base vertex v sits at slot t*n + v)."""
     return [np.ascontiguousarray(state.reshape(n_tenants, n)[t])
             for t in range(n_tenants)]
+
+
+# ---------------------------------------------------------------------------
+# batch formation: which queued requests ride the next fused launch
+# ---------------------------------------------------------------------------
+#
+# A *former* owns the server's pending queue. Entries are any objects
+# exposing three read-only attributes: ``tenant`` (str), ``klass`` (the
+# (program, graph) shape-class key — one fused launch serves exactly one
+# class) and ``demand`` (the admission-time per-round task estimate, the
+# same number QueueConfig budgets are charged with). The engine pushes on
+# admission and calls ``form(width_for)`` to pop the next batch; at most
+# one entry per tenant rides a batch (each tenant owns whole columns) and
+# only queue *heads* are ever popped, so intra-tenant FIFO order is
+# preserved by construction in every discipline.
+
+class FifoFormer:
+    """Head-of-line batch formation — the original ``_next_batch``.
+
+    One global FIFO: the next batch's class is whatever the oldest
+    pending request wants, filled by scanning the whole queue for
+    same-class requests from distinct tenants (arrival order of the
+    rest preserved). A heavy tenant that keeps the head occupied can
+    starve light tenants — that is the trade :class:`DrrFormer` fixes.
+    """
+
+    def __init__(self) -> None:
+        self._q: Deque = deque()
+
+    def push(self, entry) -> None:
+        self._q.append(entry)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def pending_tenants(self) -> List[str]:
+        return list({e.tenant: None for e in self._q})
+
+    def form(self, width_for: Callable) -> List:
+        """Pop the next batch (``[]`` when idle) — bit-identical to the
+        pre-former serving loop's head-of-line scan."""
+        if not self._q:
+            return []
+        head = self._q[0]
+        key = head.klass
+        width = int(width_for(head))
+        taken: List = []
+        seen_tenants = set()
+        rest: Deque = deque()
+        while self._q:
+            e = self._q.popleft()
+            if (len(taken) < width and e.klass == key
+                    and e.tenant not in seen_tenants):
+                taken.append(e)
+                seen_tenants.add(e.tenant)
+            else:
+                rest.append(e)
+        self._q = rest
+        return taken
+
+
+class DrrFormer:
+    """Deficit-round-robin batch formation across tenants.
+
+    Classic DRR adapted to fused tenant-column launches: one FIFO queue
+    per tenant, a round-robin ring over tenants in first-seen order, and
+    a per-tenant *deficit* counter. Each formation pass grants every
+    pending tenant one ``quantum`` of deficit; the first tenant (in ring
+    order from the RR pointer) whose head request's ``demand`` fits its
+    deficit becomes the batch **setter** — its head fixes the batch's
+    (program, graph) class — and is charged that demand. The remaining
+    width is filled by one ring cycle of *riders*: other tenants whose
+    heads match the class and fit their deficit (charged the same way).
+    The pointer then advances past the setter.
+
+    Properties (tests/test_serve.py pins them):
+
+    * **starvation-free** — with the default adaptive quantum (max
+      demand seen) every pending head fits on its first visit, so the
+      setter is always the first pending tenant at/after the pointer
+      and every pending tenant sets a batch within ``n_tenants``
+      formations; a request admitted behind ``d`` same-tenant requests
+      launches within ``d * n_tenants`` formations.
+    * **FIFO within a tenant** — only heads are popped.
+    * **no banking while idle** — a tenant's deficit resets to zero
+      when its queue empties, so bursts don't inherit credit.
+    """
+
+    def __init__(self, quantum: Optional[int] = None) -> None:
+        self._by_tenant: Dict[str, Deque] = {}
+        self._ring: List[str] = []          # tenants, first-seen order
+        self._rr = 0                        # ring index of the next setter
+        self._deficit: Dict[str, int] = {}
+        self._quantum = None if quantum is None else int(quantum)
+        self._max_demand = 1                # adaptive-quantum floor
+
+    def push(self, entry) -> None:
+        t = entry.tenant
+        q = self._by_tenant.get(t)
+        if q is None:
+            q = self._by_tenant[t] = deque()
+            self._ring.append(t)
+            self._deficit[t] = 0
+        q.append(entry)
+        self._max_demand = max(self._max_demand, int(entry.demand))
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._by_tenant.values())
+
+    def pending_tenants(self) -> List[str]:
+        return [t for t in self._ring if self._by_tenant[t]]
+
+    def _charge(self, tenant: str, demand: int) -> None:
+        self._deficit[tenant] -= int(demand)
+        if not self._by_tenant[tenant]:
+            self._deficit[tenant] = 0       # no banking while idle
+
+    def form(self, width_for: Callable) -> List:
+        """Pop the next batch (``[]`` when idle)."""
+        order = [self._ring[(self._rr + i) % len(self._ring)]
+                 for i in range(len(self._ring))] if self._ring else []
+        order = [t for t in order if self._by_tenant[t]]
+        if not order:
+            return []
+        quantum = (self._max_demand if self._quantum is None
+                   else self._quantum)
+        setter = None
+        while setter is None:               # each pass grants EVERY
+            for t in order:                 # pending tenant one quantum
+                self._deficit[t] += quantum
+                if (setter is None and
+                        self._by_tenant[t][0].demand <= self._deficit[t]):
+                    setter = t              # keep granting to the rest
+        e0 = self._by_tenant[setter].popleft()
+        self._charge(setter, e0.demand)
+        key = e0.klass
+        width = int(width_for(e0))
+        taken = [e0]
+        si = order.index(setter)
+        for t in order[si + 1:] + order[:si]:   # one rider cycle
+            if len(taken) >= width:
+                break
+            q = self._by_tenant[t]
+            if q and q[0].klass == key and q[0].demand <= self._deficit[t]:
+                e = q.popleft()
+                self._charge(t, e.demand)
+                taken.append(e)
+        self._rr = (self._ring.index(setter) + 1) % len(self._ring)
+        return taken
 
 
 @dataclass

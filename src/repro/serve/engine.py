@@ -16,9 +16,13 @@ compile cache. Life of a request:
    (:mod:`repro.serve.batching`): one shard_map launch serves up to
    ``batch_width`` tenants; short batches are padded so every launch hits
    the SAME compile-cache entry.
-3. **Execution** — :func:`repro.sparse.program.run_program` on the
-   batched program; per-request results are the unpacked tenant columns,
-   bit-identical to standalone launches for the min-reduce programs.
+3. **Execution** — :func:`repro.sparse.program.launch_program` on the
+   batched program: launches are *device futures* (JAX async dispatch),
+   held in an inflight window of up to ``ServeOptions.inflight_depth``
+   batches so batch k+1 forms and launches while batch k computes;
+   results are harvested lazily, oldest-first, and per-request results
+   are the unpacked tenant columns, bit-identical to standalone launches
+   for the min-reduce programs under ANY depth.
 4. **Observability** — per-tenant and aggregate counters
    (:mod:`repro.serve.stats`): queue depth, compile-cache hit rate,
    NoC drops (always attributed, never swallowed), p50/p99 latency.
@@ -40,9 +44,10 @@ from ..core.queues import QueueConfig
 from ..sparse import program as program_mod
 from ..sparse.csr import CSR
 from ..sparse.options import LaunchOptions
-from ..sparse.program import prewarm_program, run_program
-from .batching import (BATCHED_PROGRAMS, TenantBatch, batched_program,
-                       split_tenant_states, tenant_graph)
+from ..sparse.program import prewarm_program
+from .batching import (BATCHED_PROGRAMS, DrrFormer, FifoFormer, TenantBatch,
+                       batched_program, split_tenant_states, tenant_graph)
+from .options import ServeOptions
 from .stats import ServingStats
 
 STATUS_OK = "ok"
@@ -84,7 +89,51 @@ class Response:
     batch_messages: int = 0            # routed tasks of the fused launch
     rounds: int = 0
     batch_width: int = 0               # real tenants in the launch
-    latency_s: float = 0.0
+    latency_s: float = 0.0             # end-to-end: submit -> harvest
+    queue_wait_s: float = 0.0          # submit -> launch (formation wait)
+    device_s: float = 0.0              # launch -> harvest (compute + xfer)
+
+
+@dataclass
+class _Pending:
+    """One admitted request waiting in a batch former (the former only
+    reads ``tenant`` / ``klass`` / ``demand``)."""
+    req: Request
+    t_enq: float                       # submit() wall-clock
+    demand: int                        # admission-time task estimate
+
+    @property
+    def tenant(self) -> str:
+        return self.req.tenant
+
+    @property
+    def klass(self) -> Tuple[str, Optional[str]]:
+        return (self.req.program, self.req.graph)
+
+
+@dataclass
+class _InflightBatch:
+    """One launched-but-unharvested fused batch in the window.
+
+    ``launch`` is the :class:`~repro.sparse.program.ProgramLaunch`
+    device future; ``error`` is set instead when the launch itself threw
+    (the batch then 'completes' instantly at harvest with every rider
+    failed, keeping response order identical to the synchronous loop).
+    Launch-time cache-delta and padding stats are stashed here and
+    applied only on successful harvest, matching the synchronous loop's
+    accounting on the failure path.
+    """
+    entries: List[_Pending]
+    batch: TenantBatch
+    g_n: int                           # base-graph vertex count
+    t_launch: float
+    launch: Optional[object] = None    # ProgramLaunch
+    error: Optional[str] = None
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    def ready(self) -> bool:
+        return self.error is not None or self.launch.is_ready()
 
 
 class ProgramServer:
@@ -103,23 +152,41 @@ class ProgramServer:
     drop-free for the serving graphs, which is what keeps batched results
     bit-identical to standalone runs.
 
+    ``serve_options`` is the :class:`~repro.serve.options.ServeOptions`
+    for the loop itself — inflight window depth, batch-formation
+    fairness (FIFO vs deficit round-robin), state-buffer donation. The
+    default reproduces the synchronous drain loop bit-for-bit.
+
     **The serving-loop contract** (one place, the three methods below are
     thin entries into it):
 
-    * :meth:`step` serves exactly ONE fused batch — it pops up to
-      ``batch_width`` queued requests of the head-of-line (program,
-      graph) class (one request per tenant), launches them as a single
-      padded tenant-column ``run_program`` (or one MoE dispatch), and
-      returns that batch's responses, ``[]`` when the queue is idle. A
-      failed launch never takes the server down: every rider gets a
-      non-retriable :data:`STATUS_FAILED` response.
-    * :meth:`drain` calls :meth:`step` until the queue is empty and
-      concatenates the responses (arrival order across batches).
+    * :meth:`step` advances the pipeline by one batch: it launches
+      fused batches (the batch former pops up to ``batch_width``
+      requests of one (program, graph) class, one per tenant; each
+      becomes a single padded tenant-column
+      :func:`~repro.sparse.program.launch_program` device future) until
+      the inflight window holds ``ServeOptions.inflight_depth`` of
+      them, then harvests every *completed* batch oldest-first —
+      blocking on the oldest only when nothing is ready — and returns
+      the harvested responses, ``[]`` when idle. Responses always
+      stream in launch order; with ``inflight_depth=1`` this is exactly
+      the old launch-then-block step. An MoE batch is a synchronous
+      barrier: the window settles first, then the one MoE dispatch
+      runs. A failed launch — at dispatch or surfacing from the device
+      at harvest — never takes the server down and poisons only its
+      own batch: every rider gets a non-retriable
+      :data:`STATUS_FAILED` response; earlier and later inflight
+      batches complete normally.
+    * :meth:`drain` calls :meth:`step` until the queue AND the inflight
+      window are empty, concatenating responses (launch order across
+      batches).
     * :meth:`run` is submit-then-drain for a whole request list:
       admission rejections are collected (never dropped), the queue is
       drained, and ALL responses come back sorted by ``req_id``.
 
-    Responses are one-to-one with submitted requests in every path.
+    Responses are one-to-one with submitted requests in every path, and
+    (for the deterministic min-reduce programs) bit-identical across
+    every ``inflight_depth`` and to standalone launches.
     """
 
     def __init__(self, fabric, graphs: Dict[str, CSR], *,
@@ -130,7 +197,8 @@ class ProgramServer:
                  launch_queues: Optional[QueueConfig] = None,
                  max_rounds: Optional[int] = None,
                  moe: Optional["MoEService"] = None,
-                 options: Optional[LaunchOptions] = None):
+                 options: Optional[LaunchOptions] = None,
+                 serve_options: Optional[ServeOptions] = None):
         if options is not None:
             if axis != "data" or launch_queues is not None:
                 raise ValueError("options= conflicts with explicit axis=/"
@@ -151,8 +219,12 @@ class ProgramServer:
         self.launch_queues = self.options.queues
         self.max_rounds = max_rounds
         self.moe = moe
+        self.serve_options = (serve_options or ServeOptions()).resolve()
         self.stats = ServingStats()
-        self._queue: Deque[Request] = deque()
+        self._former = (DrrFormer(self.serve_options.drr_quantum)
+                        if self.serve_options.fairness == "drr"
+                        else FifoFormer())
+        self._window: Deque[_InflightBatch] = deque()
         self._inflight_demand: Dict[str, int] = {}
         self._n_dev = self.fabric.n_devices
 
@@ -230,8 +302,8 @@ class ProgramServer:
                 reason=(f"tenant budget {budget} tasks/round: "
                         f"{pending} pending + {demand} requested"))
         self._inflight_demand[req.tenant] = pending + demand
-        self._queue.append(req)
-        self.stats.observe_queue_depth(len(self._queue))
+        self._former.push(_Pending(req, time.perf_counter(), demand))
+        self.stats.observe_queue_depth(len(self._former))
         return None
 
     # ---- pre-warm --------------------------------------------------------
@@ -256,6 +328,7 @@ class ProgramServer:
                 keys = prewarm_program(
                     prog, tg, self.fabric, options=self.options,
                     max_rounds=self.max_rounds,
+                    donate_states=self.serve_options.donate_buffers,
                     params={"roots": (0,) * self.batch_width})
                 out[(name, gname)] = keys
                 self.stats.prewarmed_keys += len(keys)
@@ -263,31 +336,13 @@ class ProgramServer:
 
     # ---- the serving loop ------------------------------------------------
 
-    def _next_batch(self) -> List[Request]:
-        """Pop up to ``batch_width`` queued requests of the head-of-line
-        (program, graph) class, preserving arrival order of the rest.
-        At most one request per tenant rides a batch — each tenant owns
-        whole columns, so per-tenant results stay per-tenant."""
-        head = self._queue[0]
-        key = (head.program, head.graph)
-        width = (self.moe.batch if head.program == "moe"
-                 else self.batch_width)
-        taken: List[Request] = []
-        seen_tenants = set()
-        rest: Deque[Request] = deque()
-        while self._queue:
-            r = self._queue.popleft()
-            if (len(taken) < width and (r.program, r.graph) == key
-                    and r.tenant not in seen_tenants):
-                taken.append(r)
-                seen_tenants.add(r.tenant)
-            else:
-                rest.append(r)
-        self._queue = rest
-        return taken
+    def _width_for(self, entry: _Pending) -> int:
+        return (self.moe.batch if entry.req.program == "moe"
+                else self.batch_width)
 
-    def _finish(self, req: Request, resp: Response) -> Response:
-        self._inflight_demand[req.tenant] -= self._demand(req)
+    def _finish(self, entry: _Pending, resp: Response) -> Response:
+        req = entry.req
+        self._inflight_demand[req.tenant] -= entry.demand
         ts = self.stats.tenant(req.tenant)
         if resp.status == STATUS_OK:
             ts.served += 1
@@ -297,20 +352,16 @@ class ProgramServer:
         ts.messages += resp.batch_messages
         ts.rounds += resp.rounds
         ts.latencies.append(resp.latency_s)
+        ts.queue_waits.append(resp.queue_wait_s)
+        ts.device_times.append(resp.device_s)
         return resp
 
-    def step(self) -> List[Response]:
-        """Serve ONE fused batch (see the class docstring's serving-loop
-        contract); ``[]`` when idle."""
-        if not self._queue:
-            return []
-        batch_reqs = self._next_batch()
-        if batch_reqs[0].program == "moe":
-            return self._step_moe(batch_reqs)
-        return self._step_graph(batch_reqs)
-
-    def _step_graph(self, reqs: List[Request]) -> List[Response]:
-        prog = batched_program(reqs[0].program)
+    def _launch_batch(self, entries: List[_Pending]) -> _InflightBatch:
+        """Dispatch one fused batch WITHOUT waiting on the result: the
+        returned record enters the inflight window. A launch-time
+        exception is captured in ``error`` (harvest fails the riders in
+        window order) — it never takes the server down."""
+        reqs = [e.req for e in entries]
         gname = reqs[0].graph
         g = self.graphs[gname]
         batch = TenantBatch(
@@ -321,62 +372,123 @@ class ProgramServer:
         tg = tenant_graph(g, self.batch_width)
         c0 = program_mod.cache_stats()
         t0 = time.perf_counter()
+        ib = _InflightBatch(entries=entries, batch=batch, g_n=g.n,
+                            t_launch=t0)
         try:
-            (state,), app_stats = run_program(
-                prog, tg, self.fabric, options=self.options,
-                max_rounds=self.max_rounds,
+            ib.launch = program_mod.launch_program(
+                batched_program(reqs[0].program), tg, self.fabric,
+                options=self.options, max_rounds=self.max_rounds,
+                donate_states=self.serve_options.donate_buffers,
                 params={"roots": batch.roots})
         except Exception as e:  # noqa: BLE001 — a failed launch must not
             # take the server down; every rider gets a non-retriable
             # failure (the request itself is suspect, not the capacity)
-            dt = time.perf_counter() - t0
-            return [self._finish(r, Response(
-                r.req_id, r.tenant, STATUS_FAILED, latency_s=dt,
-                reason=f"{type(e).__name__}: {e}")) for r in reqs]
-        dt = time.perf_counter() - t0
+            ib.error = f"{type(e).__name__}: {e}"
+            return ib
         c1 = program_mod.cache_stats()
-        self.stats.cache_hits += c1["hits"] - c0["hits"]
-        self.stats.cache_misses += c1["misses"] - c0["misses"]
+        ib.cache_hits = c1["hits"] - c0["hits"]
+        ib.cache_misses = c1["misses"] - c0["misses"]
+        return ib
+
+    def _harvest(self, ib: _InflightBatch) -> List[Response]:
+        """Materialize one inflight batch: block, transfer, split tenant
+        columns, settle the ledger. Failures (captured at launch OR
+        surfacing from the device at harvest) poison only this batch's
+        riders, non-retriably."""
+        err = ib.error
+        app_stats = state = None
+        if err is None:
+            try:
+                (state,), app_stats = ib.launch.result()
+            except Exception as e:  # noqa: BLE001 — device-side failure
+                err = f"{type(e).__name__}: {e}"
+        t1 = time.perf_counter()
+        dt = t1 - ib.t_launch
+        if err is not None:
+            return [self._finish(e, Response(
+                e.req.req_id, e.req.tenant, STATUS_FAILED, reason=err,
+                latency_s=t1 - e.t_enq, device_s=dt,
+                queue_wait_s=ib.t_launch - e.t_enq))
+                for e in ib.entries]
+        self.stats.cache_hits += ib.cache_hits
+        self.stats.cache_misses += ib.cache_misses
         self.stats.launches += 1
-        self.stats.batched_requests += batch.n_real
-        self.stats.pad_columns += self.batch_width - batch.n_real
+        self.stats.batched_requests += ib.batch.n_real
+        self.stats.pad_columns += self.batch_width - ib.batch.n_real
         self.stats.noc_drops += app_stats.total_drops
         self.stats.round_latencies.append(dt / max(1, app_stats.rounds))
-        per_tenant = split_tenant_states(state, g.n, self.batch_width)
-        return [self._finish(r, Response(
-            r.req_id, r.tenant, STATUS_OK, result=per_tenant[i],
+        per_tenant = split_tenant_states(state, ib.g_n, self.batch_width)
+        return [self._finish(e, Response(
+            e.req.req_id, e.req.tenant, STATUS_OK, result=per_tenant[i],
             batch_drops=app_stats.total_drops,
             batch_messages=app_stats.total_messages,
-            rounds=app_stats.rounds,
-            batch_width=batch.n_real, latency_s=dt))
-            for i, r in enumerate(reqs)]
+            rounds=app_stats.rounds, batch_width=ib.batch.n_real,
+            latency_s=t1 - e.t_enq, device_s=dt,
+            queue_wait_s=ib.t_launch - e.t_enq))
+            for i, e in enumerate(ib.entries)]
 
-    def _step_moe(self, reqs: List[Request]) -> List[Response]:
+    def _harvest_window(self, *, block: bool) -> List[Response]:
+        """Harvest completed batches oldest-first — NEVER out of order,
+        so responses stream in launch order under any depth. Non-blocking
+        unless ``block`` (then the whole window settles)."""
+        out: List[Response] = []
+        while self._window and (block or self._window[0].ready()):
+            out.extend(self._harvest(self._window.popleft()))
+        return out
+
+    def step(self) -> List[Response]:
+        """Advance the pipeline by one batch (see the class docstring's
+        serving-loop contract); ``[]`` when idle."""
+        out: List[Response] = []
+        depth = self.serve_options.inflight_depth
+        while len(self._former) and len(self._window) < depth:
+            entries = self._former.form(self._width_for)
+            if entries[0].req.program == "moe":
+                # the MoE lane is synchronous — settle the window first
+                # so responses keep streaming in launch order
+                out.extend(self._harvest_window(block=True))
+                out.extend(self._step_moe(entries))
+                return out
+            self._window.append(self._launch_batch(entries))
+        out.extend(self._harvest_window(block=False))
+        if not out and self._window:
+            # window full (or queue empty) and nothing ready: the oldest
+            # launch is the one the loop must wait on
+            out.extend(self._harvest(self._window.popleft()))
+        return out
+
+    def _step_moe(self, entries: List[_Pending]) -> List[Response]:
+        reqs = [e.req for e in entries]
         t0 = time.perf_counter()
         try:
             outs, hit = self.moe.dispatch([r.payload for r in reqs],
                                           self.mesh)
         except Exception as e:  # noqa: BLE001
-            dt = time.perf_counter() - t0
-            return [self._finish(r, Response(
-                r.req_id, r.tenant, STATUS_FAILED, latency_s=dt,
-                reason=f"{type(e).__name__}: {e}")) for r in reqs]
-        dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            return [self._finish(en, Response(
+                en.req.req_id, en.req.tenant, STATUS_FAILED,
+                reason=f"{type(e).__name__}: {e}",
+                latency_s=t1 - en.t_enq, device_s=t1 - t0,
+                queue_wait_s=t0 - en.t_enq)) for en in entries]
+        t1 = time.perf_counter()
+        dt = t1 - t0
         self.stats.cache_hits += int(hit)
         self.stats.cache_misses += int(not hit)
         self.stats.launches += 1
         self.stats.batched_requests += len(reqs)
         self.stats.pad_columns += self.moe.batch - len(reqs)
         self.stats.round_latencies.append(dt)
-        return [self._finish(r, Response(
-            r.req_id, r.tenant, STATUS_OK, result=outs[i], rounds=1,
-            batch_width=len(reqs), latency_s=dt))
-            for i, r in enumerate(reqs)]
+        return [self._finish(en, Response(
+            en.req.req_id, en.req.tenant, STATUS_OK, result=outs[i],
+            rounds=1, batch_width=len(reqs), latency_s=t1 - en.t_enq,
+            device_s=dt, queue_wait_s=t0 - en.t_enq))
+            for i, en in enumerate(entries)]
 
     def drain(self) -> List[Response]:
-        """:meth:`step` until idle (see the class docstring)."""
+        """:meth:`step` until idle, then settle the whole inflight
+        window (see the class docstring)."""
         out: List[Response] = []
-        while self._queue:
+        while len(self._former) or self._window:
             out.extend(self.step())
         return out
 
@@ -393,7 +505,14 @@ class ProgramServer:
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        """Admitted requests not yet launched (inflight batches have
+        left the queue)."""
+        return len(self._former)
+
+    @property
+    def inflight_depth(self) -> int:
+        """Launched-but-unharvested fused batches in the window."""
+        return len(self._window)
 
 
 class MoEService:

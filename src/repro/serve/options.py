@@ -1,0 +1,62 @@
+"""ServeOptions — the serving-loop knobs, LaunchOptions' counterpart.
+
+:class:`~repro.sparse.options.LaunchOptions` configures one *launch*
+(queue sizing, route impl, round mode); :class:`ServeOptions` configures
+the *loop* that issues launches: how many fused batches may be in flight
+at once, how batches are formed across tenants, and whether retired
+state buffers are donated back to the allocator. The defaults
+(``inflight_depth=1``, FIFO formation, no donation) reproduce the
+synchronous drain loop bit-for-bit — responses, cache keys, ledger.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+#: batch-formation disciplines (see repro.serve.batching formers)
+FAIRNESS_MODES = ("fifo", "drr")
+
+
+@dataclass(frozen=True)
+class ServeOptions:
+    """Immutable serving-loop configuration.
+
+    * ``inflight_depth`` — size of the launch window: batch k+1 is
+      formed, admitted and dispatched while batch k's arrays are still
+      computing on device; harvesting is lazy (poll ``jax.Array``
+      readiness, block only at the window boundary or in ``drain``).
+      Depth 1 = today's launch-then-block loop.
+    * ``fairness`` — ``"fifo"`` is head-of-line batch formation (today's
+      behavior, byte-compatible cache keys); ``"drr"`` is deficit
+      round-robin across tenants: per-tenant FIFO queues, deficit
+      counters charged by each request's admission demand, starvation-
+      free (a pending tenant becomes the batch setter within
+      ``n_tenants`` formations), order preserved within a tenant.
+    * ``drr_quantum`` — deficit refill per formation pass; ``None``
+      (default) adapts to the largest demand seen so every head fits on
+      its first visit. A smaller fixed quantum makes heavyweight
+      requests wait extra passes banking deficit — classic DRR.
+    * ``donate_buffers`` — thread ``donate_argnums`` through the batched
+      jit so each launch's packed tenant-column state input is donated
+      to its output; a retired batch's device buffer is recycled rather
+      than freshly allocated. Donation changes lowering, so it joins the
+      compile-cache key ONLY when set — default keys stay byte-identical
+      (pre-warm compiles the donated shape class when enabled).
+    """
+    inflight_depth: int = 1
+    fairness: str = "fifo"
+    drr_quantum: Optional[int] = None
+    donate_buffers: bool = False
+
+    def resolve(self) -> "ServeOptions":
+        """Validate and return self (mirrors LaunchOptions.resolve)."""
+        if int(self.inflight_depth) < 1:
+            raise ValueError(
+                f"inflight_depth must be >= 1, got {self.inflight_depth}")
+        if self.fairness not in FAIRNESS_MODES:
+            raise ValueError(f"fairness must be one of {FAIRNESS_MODES}, "
+                             f"got {self.fairness!r}")
+        if self.drr_quantum is not None and int(self.drr_quantum) < 1:
+            raise ValueError(
+                f"drr_quantum must be >= 1 or None, got {self.drr_quantum}")
+        return self

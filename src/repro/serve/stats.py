@@ -1,24 +1,37 @@
 """Serving observability: per-tenant / per-round counters and latency
 quantiles — the repo's first serving-stats layer.
 
-Everything is plain counters + a latency reservoir; ``snapshot()``
-renders one JSON-able dict (the CI smoke leg and ``serve_bench`` assert
-on it). Accounting invariant (asserted by :meth:`ServingStats.verify`):
-every submitted request is exactly one of served / rejected / failed —
-nothing is silently dropped — and every NoC-level task drop the engine
-observed is attributed to a response (``noc_drops``), never swallowed.
+Everything is plain counters + **bounded** latency reservoirs;
+``snapshot()`` renders one JSON-able dict (the CI smoke leg and
+``serve_bench`` assert on it). A resident server runs for days, so every
+per-event list is a ``deque(maxlen=STATS_WINDOW)``: quantiles are
+computed over the most recent window and host memory stays O(window) no
+matter how long the server lives (tests/test_serve.py pins the cap).
+Accounting invariant (asserted by :meth:`ServingStats.verify`): every
+submitted request is exactly one of served / rejected / failed — nothing
+is silently dropped — and every NoC-level task drop the engine observed
+is attributed to a response (``noc_drops``), never swallowed.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Deque, Dict
+
+#: bound on every per-event reservoir (latencies, queue-depth samples);
+#: quantiles are over the most recent STATS_WINDOW events
+STATS_WINDOW = 4096
 
 
-def _quantile(xs: List[float], q: float) -> float:
+def _window() -> Deque:
+    return deque(maxlen=STATS_WINDOW)
+
+
+def _quantile(xs, q: float) -> float:
     """Nearest-rank quantile (no numpy dependency for the hot path)."""
-    if not xs:
-        return 0.0
     s = sorted(xs)
+    if not s:
+        return 0.0
     i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
     return s[i]
 
@@ -35,7 +48,11 @@ class TenantStats:
     noc_drops: int = 0                # IQ-overflow task drops
     messages: int = 0                 # routed tasks
     rounds: int = 0                   # NoC rounds
-    latencies: List[float] = field(default_factory=list)
+    latencies: Deque[float] = field(default_factory=_window)
+    # end-to-end latency decomposed: time queued before launch vs time
+    # the fused launch spent computing (submit -> launch -> harvest)
+    queue_waits: Deque[float] = field(default_factory=_window)
+    device_times: Deque[float] = field(default_factory=_window)
 
     def snapshot(self) -> Dict:
         return {
@@ -45,6 +62,10 @@ class TenantStats:
             "rounds": self.rounds,
             "p50_latency_s": _quantile(self.latencies, 0.50),
             "p99_latency_s": _quantile(self.latencies, 0.99),
+            "p50_queue_wait_s": _quantile(self.queue_waits, 0.50),
+            "p99_queue_wait_s": _quantile(self.queue_waits, 0.99),
+            "p50_device_s": _quantile(self.device_times, 0.50),
+            "p99_device_s": _quantile(self.device_times, 0.99),
         }
 
 
@@ -59,8 +80,9 @@ class ServingStats:
     cache_hits: int = 0               # TaskProgram compile-cache hits
     cache_misses: int = 0
     prewarmed_keys: int = 0
-    queue_depth_samples: List[int] = field(default_factory=list)
-    round_latencies: List[float] = field(default_factory=list)
+    max_queue_depth: int = 0          # running max (survives the window)
+    queue_depth_samples: Deque[int] = field(default_factory=_window)
+    round_latencies: Deque[float] = field(default_factory=_window)
 
     def tenant(self, name: str) -> TenantStats:
         ts = self.tenants.get(name)
@@ -74,7 +96,10 @@ class ServingStats:
         return self.cache_hits / total if total else 0.0
 
     def observe_queue_depth(self, depth: int) -> None:
-        self.queue_depth_samples.append(int(depth))
+        depth = int(depth)
+        self.queue_depth_samples.append(depth)
+        if depth > self.max_queue_depth:
+            self.max_queue_depth = depth
 
     def verify(self) -> None:
         """The no-silent-drop ledger: submitted == served + rejected +
@@ -97,7 +122,7 @@ class ServingStats:
             "cache_misses": self.cache_misses,
             "cache_hit_rate": self.cache_hit_rate,
             "prewarmed_keys": self.prewarmed_keys,
-            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "max_queue_depth": self.max_queue_depth,
             "p50_round_latency_s": _quantile(self.round_latencies, 0.50),
             "p99_round_latency_s": _quantile(self.round_latencies, 0.99),
             "tenants": {t: s.snapshot() for t, s in self.tenants.items()},

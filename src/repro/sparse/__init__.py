@@ -5,7 +5,8 @@ from . import apps, csr, datasets, ref                    # noqa: F401
 _JAX_APPS = ("AppStats", "PROGRAMS", "TaskProgram", "dcra_bfs",
              "dcra_histogram", "dcra_kcore", "dcra_pagerank",
              "dcra_scatter", "dcra_spmv", "dcra_sssp", "dcra_wcc",
-             "histogram_task_stream", "run_program", "spmv_task_stream")
+             "histogram_task_stream", "launch_program", "run_program",
+             "ProgramLaunch", "spmv_task_stream")
 
 # launch configuration (numpy-only module — no jax import)
 _OPTIONS = ("LaunchOptions", "resolve_options")

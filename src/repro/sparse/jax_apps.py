@@ -34,8 +34,9 @@ from .csr import CSR
 from .options import LaunchOptions
 # dcra_scatter / from_owner_layout are re-exported: tests and benchmarks
 # address the one-round scatter and the layout inverse through this module
-from .program import (AppStats, TaskProgram, dcra_scatter,  # noqa: F401
-                      from_owner_layout, run_program)
+from .program import (AppStats, ProgramLaunch, TaskProgram,  # noqa: F401
+                      dcra_scatter, from_owner_layout, launch_program,
+                      run_program)
 
 
 # ---------------------------------------------------------------------------

@@ -510,6 +510,99 @@ def _build_scatter_fn(mesh, axis, pod_axis, pods,  # noqa: PLR0917
 # the runtime
 # ---------------------------------------------------------------------------
 
+class ProgramLaunch:
+    """One in-flight graph-program launch — a *device future*.
+
+    JAX dispatch is asynchronous: the jitted shard_map call returns as
+    soon as the computation is enqueued, with the output ``jax.Array``\\ s
+    still materializing on device. :func:`launch_program` hands those
+    raw outputs back wrapped in this object instead of blocking on host
+    readback, so a caller (the serving tier's inflight window) can form
+    and launch the NEXT batch while this one computes.
+
+    * :meth:`is_ready` — non-blocking poll: have all output buffers
+      committed? (``jax.Array.is_ready`` where available; conservatively
+      ``True`` otherwise, so harvesting degrades to blocking.)
+    * :meth:`block` — wait for completion without transferring; runtime
+      errors of the computation surface here (and only poison THIS
+      launch — the caller fails its riders, not the window).
+    * :meth:`result` — block + host transfer + owner-layout unpack:
+      exactly the ``(state_arrays, AppStats)`` the synchronous
+      :func:`run_program` returns, bit-identical.
+    """
+
+    def __init__(self, fab: Fabric, outs, n: int,  # noqa: PLR0917
+                 n_dev: int, n_states: int):
+        self._fab, self._outs = fab, outs
+        self._n, self._n_dev, self._n_states = n, n_dev, n_states
+        self._result = None
+
+    def is_ready(self) -> bool:
+        """True once every output buffer is committed (non-blocking)."""
+        if self._result is not None:
+            return True
+        for a in self._outs:
+            ready = getattr(a, "is_ready", None)
+            if ready is not None and not ready():
+                return False
+        return True
+
+    def block(self) -> "ProgramLaunch":
+        """Wait for the device computation (no host transfer yet)."""
+        jax.block_until_ready(self._outs)
+        return self
+
+    def result(self):
+        """``(state_arrays, AppStats)`` — blocks, transfers, unpacks.
+        Idempotent: the materialized result is cached on first call."""
+        if self._result is None:
+            outs = self._outs
+            states = outs[:self._n_states]
+            r, msgs, drops = outs[self._n_states:]
+            stats = _collect_stats(r, msgs, drops)
+            states_np = tuple(
+                np.asarray(from_owner_layout(_host_gather(self._fab, s),
+                                             self._n, self._n_dev),
+                           np.float64)
+                for s in states)
+            self._result = (states_np, stats)
+            self._outs = None                 # release device buffers
+        return self._result
+
+
+def launch_program(prog: TaskProgram, data, fabric, *,
+                   options: Optional[LaunchOptions] = None,
+                   params: Optional[Mapping] = None,
+                   max_rounds: Optional[int] = None,
+                   donate_states: bool = False) -> ProgramLaunch:
+    """Launch a *graph* :class:`TaskProgram` without blocking on host
+    readback: returns a :class:`ProgramLaunch` device future.
+
+    The compile-cache key, admission behaviour and results are identical
+    to :func:`run_program` (which is now a thin ``launch + .result()``)
+    — the only difference is WHEN the host waits. Stream
+    (``mode="single"``) programs have no launch future (their scatter
+    already returns sharded arrays); asking for one is an error.
+
+    ``donate_states=True`` threads ``donate_argnums`` through the jitted
+    shard_map call for the packed state buffers: the input tenant-column
+    state array of each launch is donated to its same-shape output, so a
+    retired batch's buffer is recycled instead of allocating a fresh
+    output per launch (the serving tier's
+    ``ServeOptions(donate_buffers=True)``). Donation changes lowering,
+    so the flag joins the compile-cache key — but ONLY when set: default
+    launches keep byte-identical cache keys.
+    """
+    if prog.mode == "single":
+        raise ValueError("launch_program handles graph programs only — "
+                         "stream programs return sharded arrays from "
+                         "dcra_scatter already; use run_program")
+    opts = resolve_options(options)
+    return _launch_graph(prog, data, as_fabric(fabric), opts,
+                         dict(params or {}), max_rounds,
+                         donate_states=donate_states)
+
+
 def run_program(prog: TaskProgram, data, fabric, *,
                 options: Optional[LaunchOptions] = None,
                 axis="data", pod_axis=None,
@@ -520,7 +613,8 @@ def run_program(prog: TaskProgram, data, fabric, *,
                 params: Optional[Mapping] = None,
                 max_rounds: Optional[int] = None, seed: int = 0,
                 dataset=None, route_impl: Optional[str] = None,
-                round_mode: Optional[str] = None):
+                round_mode: Optional[str] = None,
+                donate_states: bool = False):
     """Execute a :class:`TaskProgram` on ``fabric``.
 
     Graph programs return ``(state_arrays, AppStats)`` — each state array
@@ -542,6 +636,9 @@ def run_program(prog: TaskProgram, data, fabric, *,
     the identical cache key). ``round_mode="pipelined"`` selects the
     double-buffered round shape (see :func:`_build_graph_fn`) —
     bit-identical results and per-round stats, fewer collectives.
+    Graph programs dispatch through :func:`launch_program` and block on
+    its :meth:`ProgramLaunch.result` — the asynchronous serving tier
+    skips only that final wait, never the launch path itself.
     """
     opts = resolve_options(options, axis=axis, pod_axis=pod_axis,
                            capacity_factor=capacity_factor, cap=cap,
@@ -595,8 +692,27 @@ def run_program(prog: TaskProgram, data, fabric, *,
         return from_owner_layout(_host_gather(fab, y_sh), n_items,
                                  n_dev), stats
 
-    # ---- graph program ---------------------------------------------------
-    g = data
+    # ---- graph program: async dispatch + immediate harvest ---------------
+    return _launch_graph(prog, data, fab, opts, params, max_rounds,
+                         dataset=dataset,
+                         donate_states=donate_states).result()
+
+
+def _launch_graph(prog: TaskProgram, g, fab: Fabric,  # noqa: PLR0917
+                  opts: LaunchOptions, params, max_rounds,
+                  dataset=None, donate_states: bool = False
+                  ) -> ProgramLaunch:
+    """The graph-program launch path shared by :func:`run_program` and
+    :func:`launch_program`: resolve, pack, hit the compile cache, and
+    dispatch — returning the :class:`ProgramLaunch` device future
+    *without* waiting on the result."""
+    axis, pod_axis, queues = opts.axis, opts.pod_axis, opts.queues
+    cap, capacity_factor = opts.cap, opts.capacity_factor
+    seed, route_impl = opts.seed, opts.route_impl
+    round_mode = opts.round_mode
+    lc = resolve_launch(opts.config, g if dataset is None else dataset,
+                        prog.name, opts.objective)
+    n_dev = fab.n_devices
     n = g.n
     n_local, src_slot, dst, w, E_max = _graph_setup(
         g, n_dev, undirected=prog.undirected, seed=seed)
@@ -629,24 +745,25 @@ def run_program(prog: TaskProgram, data, fabric, *,
     key = (prog, n, n_dev, n_local, E_max, axis, pod_axis, pods, caps,
            impl, rounds, round_mode, len(packed),
            tuple(sorted(kparams.items())), fab.fabric_key())
+    if donate_states:
+        # donation changes lowering (input/output buffer aliasing), so it
+        # joins the key — but ONLY when set, keeping default launches'
+        # cache keys byte-identical to every prior release
+        key = key + ("donate",)
     fn = _cached(key, lambda: _build_graph_fn(
         prog, fab.mesh, axis, pod_axis, pods, n_dev, n_local, n, caps,
-        kparams, rounds, len(packed), impl, round_mode=round_mode))
+        kparams, rounds, len(packed), impl, round_mode=round_mode,
+        donate_states=donate_states))
     spec = P((pod_axis, axis)) if pod_axis else P(axis)
     out = fn(*(_to_global(fab, spec, a)
                for a in (src_slot, dst, w) + packed))
-    states, (r, msgs, drops) = out[:len(packed)], out[len(packed):]
-    stats = _collect_stats(r, msgs, drops)
-    states_np = tuple(np.asarray(from_owner_layout(_host_gather(fab, s),
-                                                   n, n_dev), np.float64)
-                      for s in states)
-    return states_np, stats
+    return ProgramLaunch(fab, tuple(out), n, n_dev, len(packed))
 
 
 def _build_graph_fn(prog, mesh, axis, pod_axis, pods,  # noqa: PLR0917
                     n_dev, n_local, n,
                     caps, params, rounds, n_states, impl=None,
-                    round_mode="lockstep"):
+                    round_mode="lockstep", donate_states=False):
     """Build the jitted shard_map callable for one graph-program shape.
 
     Two execution shapes, selected by ``round_mode`` (bit-identical
@@ -837,9 +954,14 @@ def _build_graph_fn(prog, mesh, axis, pod_axis, pods,  # noqa: PLR0917
 
     in_specs = (spec, spec, spec) + (spec,) * n_states
     out_specs = (spec,) * n_states + (P(), P(), P())
+    # donation aliases each packed state input onto the matching state
+    # output: a retired batch's tenant-column buffer is handed straight
+    # to the next launch of the same shape class instead of allocating
+    donate = tuple(range(3, 3 + n_states)) if donate_states else ()
     return jax.jit(shard_map_unchecked(kernel, mesh=mesh,
                                        in_specs=in_specs,
-                                       out_specs=out_specs))
+                                       out_specs=out_specs),
+                   donate_argnums=donate)
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,38 @@ def test_bucket_impls_bit_identical(seed, n, n_buckets, cap):
         assert int(ref[3]) == int(got[3]), name
 
 
+def test_bucket_sort_gather_matches_onehot():
+    """The gather-based sort bucketing: ``xb``/aux come straight off the
+    stable argsort (slot (b, p) gathers sorted position start[b] + p)
+    instead of a second segment-sum scatter. Must be bit-identical to the
+    one-hot reference on prime sizes — including 1-D payload squeeze,
+    aux columns, task_slot and the first-cap-per-channel drop count."""
+    from repro.kernels.route import bucket_sort_gather
+    for seed, n, n_buckets, cap in [(0, 7, 3, 2), (1, 101, 13, 3),
+                                    (2, 499, 31, 1), (3, 17, 5, 8)]:
+        rng = np.random.default_rng(seed)
+        dest = jnp.asarray(rng.integers(0, n_buckets, n), jnp.int32)
+        valid = jnp.asarray(rng.random(n) < 0.8)
+        aux = [jnp.asarray(rng.integers(0, 999, n), jnp.int32)]
+        for shape in ((n, 3), (n,)):
+            x = jnp.asarray(rng.random(shape), jnp.float32)
+            want = bucket(x, dest, valid, aux, n_buckets, cap,
+                          impl="onehot")
+            got = bucket_sort_gather(x, dest, valid, aux, n_buckets, cap)
+            assert got[0].shape == want[0].shape
+            assert jnp.array_equal(want[0], got[0]), (seed, shape)
+            assert jnp.array_equal(want[1][0], got[1][0]), (seed, shape)
+            assert jnp.array_equal(want[2], got[2]), (seed, shape)
+            assert int(want[3]) == int(got[3]), (seed, shape)
+    # empty stream: identity outputs, no zero-size sort
+    e_i = jnp.zeros((0,), jnp.int32)
+    xb, ints, slot, nd = bucket_sort_gather(
+        jnp.zeros((0, 2), jnp.float32), e_i, jnp.zeros((0,), bool),
+        [e_i], 4, 2)
+    assert xb.shape == (8, 2) and ints[0].shape == (8,)
+    assert slot.shape == (0,) and int(nd) == 0
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), op=st.sampled_from(["add", "min",
                                                            "store"]))

@@ -19,7 +19,12 @@ Part B (subprocess, 8 fake host devices) — the serving contract:
 * undersized *launch* queues produce NoC drops that are attributed to
   responses and stats, never swallowed;
 * the MoE lane serves batched token blocks through one warm jitted
-  dispatch (no re-trace after warm-up) and matches the einsum oracle.
+  dispatch (no re-trace after warm-up) and matches the einsum oracle;
+* **continuous serving**: for every ``inflight_depth`` in {1, 2, 4} (and
+  the DRR former, and donated buffers) the responses, per-tenant ledger
+  and cache keys are bit-identical to the synchronous drain with zero
+  extra re-traces; a poisoned batch at window position 2 of 3 fails only
+  its own riders while earlier/later inflight batches complete.
 """
 import json
 import os
@@ -208,6 +213,144 @@ def test_oversized_demand_rejected_nonretriable():
     assert srv.stats.tenant("acme").rejected == 1
 
 
+def test_serve_options_validation():
+    from repro.serve import ServeOptions
+    assert ServeOptions().resolve().inflight_depth == 1
+    assert ServeOptions(inflight_depth=4, fairness="drr",
+                        drr_quantum=100).resolve().fairness == "drr"
+    with pytest.raises(ValueError, match="inflight_depth"):
+        ServeOptions(inflight_depth=0).resolve()
+    with pytest.raises(ValueError, match="fairness"):
+        ServeOptions(fairness="lifo").resolve()
+    with pytest.raises(ValueError, match="drr_quantum"):
+        ServeOptions(drr_quantum=0).resolve()
+
+
+class _Entry:
+    """Former-protocol stub: tenant / klass / demand (+ a test tag)."""
+
+    def __init__(self, tenant, klass, demand=1, tag=0):
+        self.tenant, self.klass = tenant, klass
+        self.demand, self.tag = demand, tag
+
+
+def test_fifo_former_head_of_line_scan():
+    """FifoFormer is the pre-former serving loop verbatim: the oldest
+    request fixes the class, same-class requests from distinct tenants
+    ride, everything else keeps arrival order."""
+    from repro.serve.batching import FifoFormer
+    f = FifoFormer()
+    for tenant, klass in [("a", "A"), ("b", "B"), ("c", "A"),
+                          ("a", "A"), ("d", "A")]:
+        f.push(_Entry(tenant, klass))
+    got = f.form(lambda e: 3)
+    assert [(e.tenant, e.klass) for e in got] == \
+        [("a", "A"), ("c", "A"), ("d", "A")]
+    # the duplicate-tenant entry and the off-class entry stay, in order
+    assert len(f) == 2 and f.pending_tenants() == ["b", "a"]
+    assert [(e.tenant, e.klass) for e in f.form(lambda e: 3)] == [("b", "B")]
+    assert [(e.tenant, e.klass) for e in f.form(lambda e: 3)] == [("a", "A")]
+    assert f.form(lambda e: 3) == []
+
+
+def test_drr_former_unstarves_light_tenants():
+    """The 1-vs-many skew FIFO gets wrong: a hog with a deep backlog of
+    one class vs three light tenants of another. FIFO would serve the
+    entire hog backlog first; DRR lets every light tenant set or ride a
+    batch within n_tenants formations of arriving."""
+    from repro.serve.batching import DrrFormer
+    f = DrrFormer()
+    for i in range(16):
+        f.push(_Entry("hog", ("bfs", "g"), demand=5, tag=i))
+    for t in ("lark", "wren", "finch"):
+        f.push(_Entry(t, ("sssp", "g"), demand=3))
+    batches = []
+    while len(f):
+        batches.append(f.form(lambda e: 4))
+    # formation 1: hog sets (no same-class riders pending); formation 2:
+    # the light class launches fused — not after 16 hog batches
+    assert [e.tenant for e in batches[0]] == ["hog"]
+    assert sorted(e.tenant for e in batches[1]) == ["finch", "lark", "wren"]
+    # intra-tenant FIFO: the hog backlog drains in admission order
+    hog_tags = [e.tag for b in batches for e in b if e.tenant == "hog"]
+    assert hog_tags == list(range(16))
+
+
+def test_drr_starvation_bound_and_intra_tenant_order():
+    """Property pin (the ISSUE acceptance bound): under random mixed
+    streams with per-tenant backlog <= batch_width, every admitted
+    request launches within ``batch_width * n_tenants`` formations of
+    its admission, and each tenant's requests pop in admission order."""
+    from repro.serve.batching import DrrFormer
+    width = 4
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        n_tenants = int(rng.integers(2, 6))
+        tenants = [f"t{i}" for i in range(n_tenants)]
+        classes = [("bfs", "g"), ("sssp", "g"), ("bfs", "h")]
+        f = DrrFormer()
+        formations, tag = 0, 0
+        admitted_at = {}
+        pending = {t: 0 for t in tenants}
+        pushed = {t: [] for t in tenants}
+        popped = {t: [] for t in tenants}
+
+        def push_some():
+            nonlocal tag
+            for t in tenants:
+                for _ in range(int(rng.integers(0, width + 1 - pending[t]))):
+                    f.push(_Entry(t, classes[int(rng.integers(0, 3))],
+                                  demand=int(rng.integers(1, 9)), tag=tag))
+                    admitted_at[tag] = formations
+                    pushed[t].append(tag)
+                    pending[t] += 1
+                    tag += 1
+
+        push_some()
+        while len(f):
+            batch = f.form(lambda e: width)
+            formations += 1
+            assert batch and len({e.tenant for e in batch}) == len(batch)
+            assert len({e.klass for e in batch}) == 1
+            for e in batch:
+                popped[e.tenant].append(e.tag)
+                pending[e.tenant] -= 1
+                wait = formations - admitted_at[e.tag]
+                assert wait <= width * n_tenants, (seed, e.tag, wait)
+            if rng.random() < 0.3:
+                push_some()
+        for t in tenants:
+            assert popped[t] == pushed[t], (seed, t)
+
+
+def test_stats_reservoirs_bounded():
+    """A resident server runs for days: every per-event reservoir is a
+    bounded deque so host memory stays O(STATS_WINDOW) — this test pins
+    the cap and the over-the-window eviction behavior."""
+    from repro.serve.stats import STATS_WINDOW, ServingStats, TenantStats
+    assert STATS_WINDOW == 4096                   # the documented cap
+    ts = TenantStats()
+    for i in range(STATS_WINDOW + 123):
+        ts.latencies.append(float(i))
+        ts.queue_waits.append(float(i))
+        ts.device_times.append(float(i))
+    assert ts.latencies.maxlen == STATS_WINDOW
+    assert len(ts.latencies) == len(ts.queue_waits) \
+        == len(ts.device_times) == STATS_WINDOW
+    # quantiles cover the most recent window only (oldest 123 evicted)
+    assert ts.snapshot()["p50_latency_s"] >= 123
+    ss = ServingStats()
+    for d in range(STATS_WINDOW + 7):
+        ss.observe_queue_depth(d)
+        ss.round_latencies.append(float(d))
+    assert len(ss.queue_depth_samples) == len(ss.round_latencies) \
+        == STATS_WINDOW
+    assert min(ss.queue_depth_samples) == 7       # eviction really happened
+    # ... but the running max survives the window
+    assert ss.max_queue_depth == STATS_WINDOW + 6
+    assert ss.snapshot()["max_queue_depth"] == STATS_WINDOW + 6
+
+
 # ---------------------------------------------------------------------------
 # Part B: the serving contract under shard_map (subprocess)
 # ---------------------------------------------------------------------------
@@ -264,6 +407,90 @@ for r, resp in zip(reqs, resps):
         bool(np.array_equal(d, resp.result)))
 srv.stats.verify()
 res['stats'] = srv.stats.snapshot()
+
+# ---- continuous serving: depth sweep bit-identity + zero re-traces -----
+from repro.serve import ServeOptions
+
+def _sig(rs):
+    return [(r.req_id, r.tenant, r.status, r.retriable, r.reason,
+             None if r.result is None else r.result.tobytes(),
+             r.batch_drops, r.batch_messages, r.rounds, r.batch_width)
+            for r in sorted(rs, key=lambda r: r.req_id)]
+
+def _ledger(s):
+    return {t: (v.submitted, v.served, v.rejected, v.failed)
+            for t, v in s.stats.tenants.items()}
+
+base_sig = _sig(resps)          # the depth-1 FIFO synchronous drain
+base_ledger = _ledger(srv)
+res['depths'] = {}
+for depth, fairness in [(1, 'fifo'), (2, 'fifo'), (4, 'fifo'), (3, 'drr')]:
+    c0 = program.cache_stats()
+    srv_d = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                          serve_options=ServeOptions(inflight_depth=depth,
+                                                     fairness=fairness))
+    rs = srv_d.run(reqs)
+    c1 = program.cache_stats()
+    srv_d.stats.verify()
+    res['depths'][f'{fairness}{depth}'] = {
+        'sig_equal': _sig(rs) == base_sig,
+        'ledger_equal': _ledger(srv_d) == base_ledger,
+        'new_misses': c1['misses'] - c0['misses'],
+        'new_traces': c1['kernel_traces'] - c0['kernel_traces'],
+        'launches': srv_d.stats.launches}
+
+# ---- donated buffers: own key class, still bit-identical ---------------
+srv_don = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                        serve_options=ServeOptions(inflight_depth=3,
+                                                   donate_buffers=True))
+k0 = len(program.cache_keys())
+srv_don.prewarm(('bfs', 'sssp'))
+k1 = len(program.cache_keys())
+c0 = program.cache_stats()
+rs_don = srv_don.run(reqs)
+c1 = program.cache_stats()
+srv_don.stats.verify()
+res['donate'] = {'sig_equal': _sig(rs_don) == base_sig,
+                 'new_keys_prewarm': k1 - k0,
+                 'new_misses_under_load': c1['misses'] - c0['misses'],
+                 'new_traces_under_load':
+                     c1['kernel_traces'] - c0['kernel_traces']}
+
+# ---- failure in flight: poisoned batch at window position 2 of 3 -------
+POISON_ROOT = g.n - 1
+real_launch = program.launch_program
+window_at_launch = []
+def _poisoned(prog, data, fabric, **kw):
+    window_at_launch.append(srv_f.inflight_depth)
+    roots = tuple((kw.get('params') or {}).get('roots') or ())
+    if POISON_ROOT in roots:
+        raise RuntimeError('injected launch failure')
+    return real_launch(prog, data, fabric, **kw)
+program.launch_program = _poisoned
+try:
+    srv_f = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                          serve_options=ServeOptions(inflight_depth=3))
+    f_reqs = (
+        [Request(i, f'a{i}', 'bfs', 'wiki', root=1) for i in range(4)]
+        + [Request(4 + i, f'b{i}', 'bfs', 'wiki',
+                   root=POISON_ROOT if i == 0 else 2) for i in range(4)]
+        + [Request(8 + i, f'c{i}', 'bfs', 'wiki', root=3) for i in range(4)])
+    f_resps = srv_f.run(f_reqs)
+    srv_f.stats.verify()
+finally:
+    program.launch_program = real_launch
+(ok1,), _ = run_program(BFS, g, mesh, params={'root': 1})
+(ok3,), _ = run_program(BFS, g, mesh, params={'root': 3})
+res['failure'] = {
+    'n_responses': len(f_resps),
+    'statuses': [r.status for r in f_resps],
+    'retriable': [r.retriable for r in f_resps],
+    'reasons_failed': [r.reason for r in f_resps if r.status != STATUS_OK],
+    'survivors_identical': bool(
+        np.array_equal(f_resps[0].result, ok1)
+        and np.array_equal(f_resps[8].result, ok3)),
+    'max_window_at_launch': max(window_at_launch),
+    'ledger': _ledger(srv_f)}
 
 # ---- admission control: undersized per-tenant budget -------------------
 n_dev = 4
@@ -435,3 +662,52 @@ def test_moe_lane_batches_by_fixed_width(results):
     # 6 single-block requests from 3 tenants -> two fused launches of the
     # fixed [4, 16, D] shape class (max one request per tenant per batch)
     assert results["moe"]["calls"] - 1 == 2
+
+
+def test_depth_sweep_bit_identical_to_sync_drain(results):
+    """The ISSUE acceptance gate: for inflight_depth in {1, 2, 4} (FIFO)
+    and depth 3 under DRR, the full response signature (results, statuses,
+    reasons, batch attribution) and the per-tenant ledger are bit-identical
+    to the synchronous drain — and the overlapped window re-uses the very
+    same compile-cache entries: zero new misses, zero new jit traces."""
+    depths = results["depths"]
+    assert set(depths) == {"fifo1", "fifo2", "fifo4", "drr3"}
+    for name, leg in depths.items():
+        assert leg["sig_equal"], name
+        assert leg["ledger_equal"], name
+        assert leg["new_misses"] == 0, name      # byte-compatible keys
+        assert leg["new_traces"] == 0, name
+        assert leg["launches"] >= 4, name
+
+
+def test_donated_buffers_own_key_class_same_responses(results):
+    """donate_argnums changes lowering, so donation joins the cache key —
+    exactly one new key per pre-warmed shape class, none for the default
+    path — and the donated pipeline still serves bit-identical responses
+    with zero re-traces after its pre-warm."""
+    d = results["donate"]
+    assert d["new_keys_prewarm"] == 2            # donated bfs + sssp
+    assert d["sig_equal"]
+    assert d["new_misses_under_load"] == 0
+    assert d["new_traces_under_load"] == 0
+
+
+def test_failure_in_flight_poisons_only_its_batch(results):
+    """A launch failure at window position 2 of 3 (inflight_depth=3)
+    fails only its own riders — non-retriably — while the earlier and
+    later inflight batches complete bit-identically; every response is
+    delivered exactly once and the ledger balances."""
+    f = results["failure"]
+    assert f["n_responses"] == 12                # nothing dropped/doubled
+    assert f["statuses"] == ["ok"] * 4 + ["failed"] * 4 + ["ok"] * 4
+    assert f["retriable"] == [False] * 12
+    assert len(f["reasons_failed"]) == 4
+    assert all("injected launch failure" in r for r in f["reasons_failed"])
+    assert f["survivors_identical"]
+    # the poisoned launch really was issued with 2 batches already in
+    # flight (window positions fill 0, 1, 2 before any harvest)
+    assert f["max_window_at_launch"] == 2
+    # ledger rows are (submitted, served, rejected, failed)
+    for tenant, row in f["ledger"].items():
+        want = [1, 0, 0, 1] if tenant.startswith("b") else [1, 1, 0, 0]
+        assert row == want, (tenant, row)
