@@ -21,9 +21,18 @@ measures the synchronous drain vs the overlapped drain on one stream and
 writes the ``dcra-serve-bench/v1`` trajectory artifact gated by
 :mod:`repro.dse.serve_compare`.
 
+``--chaos SEED`` is the chaos-smoke leg: the stream runs fault-free
+once, then replays under :func:`repro.serve.seeded_chaos_plan` (one
+launch fault, one device-side fault, one host loss that halves the
+fabric) with retries and a circuit breaker enabled, and *asserts* the
+fault-tolerance contract — every planned fault fired, the ledger stayed
+exact, at least one retry and one breaker open/close cycle happened, and
+the surviving responses are bit-identical to the fault-free reference.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--devices 8]
       [--requests 48] [--tenants 6] [--depth 3] [--fairness drr]
-      [--donate] [--smoke] [--fabric] [--bench-out BENCH_serve.json]
+      [--donate] [--smoke] [--chaos SEED] [--fabric]
+      [--bench-out BENCH_serve.json]
 
 ``--fabric`` drives the whole bench through the :class:`repro.core.fabric`
 launch surface (``Fabric.fake`` -> ``ProgramServer(fabric, ...)``) instead
@@ -161,6 +170,11 @@ def main(argv=None) -> None:
                          "launch of the shape class")
     ap.add_argument("--smoke", action="store_true",
                     help="short CI stream; assert serving invariants")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run the stream twice — fault-free, then under "
+                         "the seeded chaos plan (one launch fault, one "
+                         "device fault, one host loss) — and assert the "
+                         "chaos run converges to the same responses")
     ap.add_argument("--fabric", action="store_true",
                     help="launch through the Fabric surface instead of a "
                          "raw Mesh")
@@ -186,6 +200,58 @@ def main(argv=None) -> None:
     opts = ServeOptions(inflight_depth=args.depth, fairness=args.fairness,
                         donate_buffers=args.donate)
     stream = make_stream(graphs, args.tenants, args.requests)
+
+    if args.chaos is not None:
+        # The chaos-smoke leg: a fault-free reference sizes the plan (its
+        # launch count bounds the injectable indices), then the SAME
+        # stream replays under the seeded plan with retries + a breaker.
+        # Every fault must fire, exactly one host loss must shrink the
+        # fabric, and the surviving responses must converge bit-identical
+        # to the reference — min-reduce programs don't care how many
+        # devices finished the job. The --smoke zero-re-trace assert does
+        # NOT apply here: the shrink re-prewarms the affected classes.
+        from repro.serve import seeded_chaos_plan
+        ref_srv, ref_resp, _, _, _ = serve_stream(
+            mesh, graphs, stream, args.width, ServeOptions())
+        n_ref = ref_srv.stats.snapshot()["launches"]
+        plan = seeded_chaos_plan(args.chaos, n_ref,
+                                 keep_devices=max(1, n_dev // 2))
+        planned = dict(plan.at)
+        chaos_opts = ServeOptions(inflight_depth=args.depth,
+                                  fairness=args.fairness,
+                                  max_retries=3, breaker_threshold=1)
+        srv = ProgramServer(mesh, graphs, batch_width=args.width,
+                            serve_options=chaos_opts, failure_plan=plan)
+        srv.prewarm(PROGRAMS)
+        responses = srv.run(stream)
+        srv.stats.verify()
+        snap = srv.stats.snapshot()
+
+        def reduced(rs):
+            return [(r.req_id, r.tenant, r.status, r.retriable,
+                     None if r.result is None else r.result.tobytes())
+                    for r in sorted(rs, key=lambda r: r.req_id)]
+
+        assert plan.exhausted, f"unfired faults: {plan.at}"
+        assert [k for _, k in plan.fired] == [planned[i]
+                                              for i in sorted(planned)], \
+            f"fault order diverged from the plan: {plan.fired}"
+        assert snap["host_losses"] == 1, snap
+        assert snap["retries"] > 0, "no request ever retried"
+        assert snap["breaker_opens"] >= 1 and snap["breaker_closes"] >= 1, \
+            snap
+        assert all(r.status == STATUS_OK for r in responses), \
+            [r.reason for r in responses if r.status != STATUS_OK]
+        assert reduced(responses) == reduced(ref_resp), \
+            "chaos responses diverged from the fault-free reference"
+        assert _ledger(srv) == _ledger(ref_srv), \
+            "chaos per-tenant ledger diverged from the fault-free reference"
+        print(f"# chaos seed={args.chaos} plan={planned} "
+              f"retries={snap['retries']} "
+              f"breaker_opens={snap['breaker_opens']} "
+              f"devices {n_dev} -> {srv.fabric.n_devices}")
+        print("RESULT chaos ok")
+        return
 
     if args.bench_out:
         # sync vs overlapped on the SAME stream — the trajectory artifact

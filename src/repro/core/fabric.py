@@ -313,6 +313,21 @@ class Fabric:
                   else None)
         return replace(self, mesh=mesh, portal_axis=portal)
 
+    def shrink(self, keep: int) -> "Fabric":
+        """:meth:`resize` onto the first ``keep`` devices of THIS fabric
+        (mesh order) — the host-loss degrade: the survivors are a prefix
+        of the current device set, no fresh ``jax.devices()`` query (a
+        lost host's devices may still be enumerable but unusable).
+        ``ProgramServer`` calls this on an injected
+        ``host_loss`` fault; a new ``fabric_key()`` means relaunched
+        shape classes re-trace on the shrunken fabric by construction.
+        """
+        keep = int(keep)
+        if not 1 <= keep <= self.n_devices:
+            raise ValueError(f"shrink keeps {keep} of {self.n_devices} "
+                             f"devices — need 1 <= keep <= n_devices")
+        return self.resize(list(self.mesh.devices.flat)[:keep])
+
 
 def axis_sizes_of(mesh_or_fabric) -> Dict[str, int]:
     """The one shared axis-size dict accessor (module-level sugar for

@@ -1,5 +1,6 @@
-"""Fault-tolerant training runtime: checkpoint-restart, failure injection,
-straggler detection (DESIGN.md §6 — 1000-node posture).
+"""Fault-tolerant runtime primitives: checkpoint-restart, failure
+injection, retry bookkeeping, straggler detection (DESIGN.md §6 —
+1000-node posture).
 
 On a real multi-host cluster, failures surface as raised exceptions from
 collectives (ICI timeouts) or as preemption signals; here the ``FailurePlan``
@@ -7,13 +8,20 @@ injects the same exception paths deterministically so the recovery logic is
 *tested*, not just written. Straggler mitigation: a per-step wall-clock
 watchdog records slow steps and (on real hardware) would trigger the
 replacement policy; the hook + accounting are exercised in tests.
+
+This module is ALSO the home of the injection/retry primitives the
+serving tier builds on (:mod:`repro.serve.resilience`): the
+:class:`InjectionSchedule` base every deterministic chaos plan derives
+from, and the :class:`RetryLedger` attempt/backoff bookkeeping shared by
+:func:`run_training` restarts and the ``ProgramServer`` retry path — one
+implementation, so training and serving count restarts the same way.
 """
 from __future__ import annotations
 
 import logging
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..checkpoint import checkpoint as ckpt
 
@@ -21,18 +29,112 @@ log = logging.getLogger("repro.runtime")
 
 
 class InjectedFailure(RuntimeError):
-    """Stands in for an ICI timeout / preempted worker."""
+    """Stands in for an ICI timeout / preempted worker / lost host."""
 
 
 @dataclass
-class FailurePlan:
-    """Deterministic failure schedule: {step: kind}."""
-    at_steps: Dict[int, str] = field(default_factory=dict)
+class InjectionSchedule:
+    """Deterministic fault schedule ``{index: kind}`` — the house chaos
+    primitive.
 
-    def check(self, step: int):
-        kind = self.at_steps.pop(step, None)
+    ``index`` is whatever the consuming loop counts (training *steps*
+    here, fused serving *launches* in
+    :class:`repro.serve.resilience.ServeFailurePlan`); each scheduled
+    index fires exactly once (popped on :meth:`due`), and every firing
+    is appended to ``fired`` so a chaos run can assert its plan actually
+    executed — a plan that never fires is a test that never tested.
+    """
+    at: Dict[int, str] = field(default_factory=dict)
+    fired: List[Tuple[int, str]] = field(default_factory=list)
+
+    #: what ``index`` counts, for failure messages (subclasses override)
+    noun = "step"
+
+    def peek(self, index: int) -> Optional[str]:
+        """The fault scheduled at ``index`` without consuming it."""
+        return self.at.get(index)
+
+    def due(self, index: int) -> Optional[str]:
+        """Pop-and-record the fault scheduled at ``index`` (None = no
+        fault due) — each scheduled index fires exactly once."""
+        kind = self.at.pop(index, None)
+        if kind is not None:
+            self.fired.append((index, kind))
+        return kind
+
+    def check(self, index: int):
+        """Raise :class:`InjectedFailure` when a fault is due."""
+        kind = self.due(index)
         if kind:
-            raise InjectedFailure(f"{kind} at step {step}")
+            raise InjectedFailure(f"{kind} at {self.noun} {index}")
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every scheduled fault has fired."""
+        return not self.at
+
+
+class FailurePlan(InjectionSchedule):
+    """Deterministic training failure schedule: {step: kind} (the
+    historical constructor; the live schedule is ``self.at``)."""
+
+    def __init__(self, at_steps: Optional[Dict[int, str]] = None):
+        super().__init__(at=dict(at_steps or {}))
+
+    @property
+    def at_steps(self) -> Dict[int, str]:
+        return self.at
+
+
+@dataclass
+class RetryLedger:
+    """Shared restart/retry bookkeeping — ONE counting rule for the
+    training loop and the serving retry path.
+
+    One integer ``key`` names one retriable unit: :func:`run_training`
+    uses a single key (the whole loop restarts), the serving tier keys
+    by ``req_id``. :meth:`record_failure` counts one failure and answers
+    whether the unit still has retry budget; :meth:`backoff_s` derives
+    the exponential backoff for the *next* attempt with a deterministic
+    per-key jitter — an integer hash of the key, never ``random`` — so a
+    replayed chaos run waits identical delays and stays reproducible.
+    """
+    max_retries: int
+    backoff_base_s: float = 0.0
+    attempts: Dict[int, int] = field(default_factory=dict)
+    total_retries: int = 0               # granted retries, all keys
+
+    def attempt(self, key: int) -> int:
+        """Failures recorded for ``key`` so far (0 = never failed)."""
+        return self.attempts.get(int(key), 0)
+
+    def record_failure(self, key: int) -> bool:
+        """Count one failure of ``key``; True while retry budget remains
+        (the failure may be retried), False when exhausted."""
+        key = int(key)
+        n = self.attempts.get(key, 0) + 1
+        self.attempts[key] = n
+        if n > self.max_retries:
+            return False
+        self.total_retries += 1
+        return True
+
+    def backoff_s(self, key: int) -> float:
+        """Deterministic exponential backoff before retrying ``key``:
+        ``base * 2**(attempt-1) * (1 + jitter)`` with ``jitter`` in
+        [0, 1) hashed from the key (Knuth multiplicative mix) — spread
+        without randomness."""
+        if self.backoff_base_s <= 0.0:
+            return 0.0
+        n = max(1, self.attempts.get(int(key), 1))
+        jitter = ((int(key) * 2654435761 + 0x9E3779B9) & 0xFFFFFFFF) / 2**32
+        return self.backoff_base_s * 2.0 ** (n - 1) * (1.0 + jitter)
+
+    def clear(self, key: int) -> None:
+        """Drop ``key``'s attempt count (the unit reached a terminal
+        outcome) — keeps a resident server's ledger O(inflight), while
+        ``total_retries`` preserves the aggregate."""
+        self.attempts.pop(int(key), None)
 
 
 @dataclass
@@ -85,16 +187,23 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
                  batch_fn: Callable[[int], Any], total_steps: int,
                  ckpt_dir: str, ckpt_every: int = 10,
                  max_restarts: int = 3,
+                 backoff_base_s: float = 0.0,
                  failure_plan: Optional[FailurePlan] = None,
                  watchdog: Optional[StragglerWatchdog] = None,
                  shardings: Optional[tuple] = None) -> TrainLoopResult:
     """Restartable loop: state = (params, opt_state).
 
     On failure: reload the latest checkpoint and continue — the data
-    pipeline is keyed by step so no loader state is needed.
+    pipeline is keyed by step so no loader state is needed. Restart
+    accounting rides the same :class:`RetryLedger` as the serving retry
+    path (one key — the loop is the unit); ``backoff_base_s`` adds the
+    ledger's deterministic exponential backoff before each restart
+    (real clusters don't restart hot into the fault that just killed
+    them).
     """
     watchdog = watchdog or StragglerWatchdog()
-    restarts = 0
+    ledger = RetryLedger(max_retries=max_restarts,
+                         backoff_base_s=backoff_base_s)
     history: List[tuple] = []          # (step, metrics) — deduped on restart
 
     def load_or_init():
@@ -122,10 +231,13 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
                 ckpt.save(ckpt_dir, step, state)
             step += 1
         except InjectedFailure as e:
-            restarts += 1
-            log.warning("failure: %s -> restart %d", e, restarts)
-            if restarts > max_restarts:
+            granted = ledger.record_failure(0)
+            log.warning("failure: %s -> restart %d", e, ledger.attempt(0))
+            if not granted:
                 raise
+            delay = ledger.backoff_s(0)
+            if delay > 0:
+                time.sleep(delay)
             step, state = load_or_init()
             # steps after the restored point re-run: drop their metrics
             # and watchdog observations or the replay double-counts them
@@ -133,5 +245,5 @@ def run_training(step_fn: Callable, init_state: Callable[[], tuple],
             # median)
             history = [(s, m) for s, m in history if s < step]
             watchdog.rollback(step)
-    return TrainLoopResult(step, restarts, [m for _, m in history],
-                           watchdog.flagged)
+    return TrainLoopResult(step, ledger.total_retries,
+                           [m for _, m in history], watchdog.flagged)

@@ -127,11 +127,22 @@ class FifoFormer:
     def push(self, entry) -> None:
         self._q.append(entry)
 
+    def push_front(self, entry) -> None:
+        """Requeue at the head of the line — a retried request must not
+        re-pay the whole queue (it already waited once); push a failed
+        batch's riders in reverse so their relative order is preserved."""
+        self._q.appendleft(entry)
+
     def __len__(self) -> int:
         return len(self._q)
 
     def pending_tenants(self) -> List[str]:
         return list({e.tenant: None for e in self._q})
+
+    def pending_classes(self) -> List:
+        """Distinct (program, graph) classes still queued, head-first —
+        what the engine re-prewarms after an elastic fabric shrink."""
+        return list({e.klass: None for e in self._q})
 
     def form(self, width_for: Callable) -> List:
         """Pop the next batch (``[]`` when idle) — bit-identical to the
@@ -201,11 +212,30 @@ class DrrFormer:
         q.append(entry)
         self._max_demand = max(self._max_demand, int(entry.demand))
 
+    def push_front(self, entry) -> None:
+        """Requeue at the head of the entry's tenant queue (see
+        :meth:`FifoFormer.push_front`) — intra-tenant FIFO order is
+        restored, the ring/deficit discipline is untouched."""
+        t = entry.tenant
+        q = self._by_tenant.get(t)
+        if q is None:
+            q = self._by_tenant[t] = deque()
+            self._ring.append(t)
+            self._deficit[t] = 0
+        q.appendleft(entry)
+        self._max_demand = max(self._max_demand, int(entry.demand))
+
     def __len__(self) -> int:
         return sum(len(q) for q in self._by_tenant.values())
 
     def pending_tenants(self) -> List[str]:
         return [t for t in self._ring if self._by_tenant[t]]
+
+    def pending_classes(self) -> List:
+        """Distinct (program, graph) classes still queued (ring order) —
+        what the engine re-prewarms after an elastic fabric shrink."""
+        return list({e.klass: None for t in self._ring
+                     for e in self._by_tenant[t]})
 
     def _charge(self, tenant: str, demand: int) -> None:
         self._deficit[tenant] -= int(demand)

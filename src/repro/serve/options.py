@@ -4,9 +4,12 @@
 (queue sizing, route impl, round mode); :class:`ServeOptions` configures
 the *loop* that issues launches: how many fused batches may be in flight
 at once, how batches are formed across tenants, and whether retired
-state buffers are donated back to the allocator. The defaults
-(``inflight_depth=1``, FIFO formation, no donation) reproduce the
-synchronous drain loop bit-for-bit — responses, cache keys, ledger.
+state buffers are donated back to the allocator — plus the failure
+posture: how many times a transiently-failed request is retried, how
+long it backs off, when it is past its deadline, and when a shape
+class's circuit breaker opens. The defaults (``inflight_depth=1``, FIFO
+formation, no donation, no retries, no deadline, no breaker) reproduce
+the synchronous drain loop bit-for-bit — responses, cache keys, ledger.
 """
 from __future__ import annotations
 
@@ -42,11 +45,37 @@ class ServeOptions:
       than freshly allocated. Donation changes lowering, so it joins the
       compile-cache key ONLY when set — default keys stay byte-identical
       (pre-warm compiles the donated shape class when enabled).
+    * ``max_retries`` — transient failures (launch exceptions, device
+      errors at harvest, MoE dispatch faults, host loss) requeue the
+      failed batch's riders at the **head of their tenant's queue** up
+      to this many times per request before the request fails
+      non-retriably; 0 (default) keeps every failure terminal on first
+      strike, the historical behavior.
+    * ``backoff_base_s`` — exponential backoff before a retry relaunch:
+      attempt n waits ``base * 2**(n-1) * (1 + jitter)`` where the
+      jitter is a deterministic hash of ``req_id`` (no ``random`` — a
+      replayed chaos run waits identical delays). 0 (default) retries
+      immediately.
+    * ``deadline_s`` — per-request end-to-end budget measured from
+      ``submit()``: a request past its deadline at batch formation or
+      after a failed launch fails non-retriably with a distinct
+      ``deadline ... exceeded`` reason, never silently retried forever.
+      ``None`` (default) = no deadline.
+    * ``breaker_threshold`` — per-(program, graph) circuit breaker:
+      this many *consecutive* failed launches of one shape class open
+      it (new submissions of the class fail fast with a retriable
+      rejection naming the breaker); the next formed batch is the
+      half-open probe, whose success closes it. ``None`` (default)
+      disables breakers.
     """
     inflight_depth: int = 1
     fairness: str = "fifo"
     drr_quantum: Optional[int] = None
     donate_buffers: bool = False
+    max_retries: int = 0
+    backoff_base_s: float = 0.0
+    deadline_s: Optional[float] = None
+    breaker_threshold: Optional[int] = None
 
     def resolve(self) -> "ServeOptions":
         """Validate and return self (mirrors LaunchOptions.resolve)."""
@@ -59,4 +88,17 @@ class ServeOptions:
         if self.drr_quantum is not None and int(self.drr_quantum) < 1:
             raise ValueError(
                 f"drr_quantum must be >= 1 or None, got {self.drr_quantum}")
+        if int(self.max_retries) < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if float(self.backoff_base_s) < 0.0:
+            raise ValueError(
+                f"backoff_base_s must be >= 0, got {self.backoff_base_s}")
+        if self.deadline_s is not None and float(self.deadline_s) <= 0.0:
+            raise ValueError(
+                f"deadline_s must be > 0 or None, got {self.deadline_s}")
+        if self.breaker_threshold is not None \
+                and int(self.breaker_threshold) < 1:
+            raise ValueError(f"breaker_threshold must be >= 1 or None, "
+                             f"got {self.breaker_threshold}")
         return self

@@ -42,6 +42,10 @@ class TenantStats:
     served: int = 0
     rejected: int = 0                 # admission-control rejections
     failed: int = 0
+    retries: int = 0                  # failed-launch requeues (a retry is
+                                      # NOT a resubmission: the request
+                                      # stays admitted, the ledger's
+                                      # submitted count is untouched)
     # launch-level attribution: drops/messages/rounds of every fused
     # launch this tenant rode (columns share one NoC, so per-column
     # splits don't exist at the engine level)
@@ -58,6 +62,7 @@ class TenantStats:
         return {
             "submitted": self.submitted, "served": self.served,
             "rejected": self.rejected, "failed": self.failed,
+            "retries": self.retries,
             "noc_drops": self.noc_drops, "messages": self.messages,
             "rounds": self.rounds,
             "p50_latency_s": _quantile(self.latencies, 0.50),
@@ -80,6 +85,12 @@ class ServingStats:
     cache_hits: int = 0               # TaskProgram compile-cache hits
     cache_misses: int = 0
     prewarmed_keys: int = 0
+    # resilience counters (repro.serve.resilience): how often the
+    # recovery machinery actually engaged — a chaos test asserts these
+    retries: int = 0                  # failed-launch rider requeues
+    breaker_opens: int = 0            # circuit-breaker open transitions
+    breaker_closes: int = 0           # half-open probe successes
+    host_losses: int = 0              # fabric shrinks survived
     max_queue_depth: int = 0          # running max (survives the window)
     queue_depth_samples: Deque[int] = field(default_factory=_window)
     round_latencies: Deque[float] = field(default_factory=_window)
@@ -103,7 +114,10 @@ class ServingStats:
 
     def verify(self) -> None:
         """The no-silent-drop ledger: submitted == served + rejected +
-        failed, per tenant (in-flight requests must be drained first)."""
+        failed, per tenant (in-flight requests must be drained first).
+        Retries deliberately do NOT enter the equation — a retried
+        request is still one submission with one eventual outcome; the
+        per-tenant ``retries`` counter tracks the extra attempts."""
         for name, ts in self.tenants.items():
             acc = ts.served + ts.rejected + ts.failed
             if ts.submitted != acc:
@@ -122,6 +136,10 @@ class ServingStats:
             "cache_misses": self.cache_misses,
             "cache_hit_rate": self.cache_hit_rate,
             "prewarmed_keys": self.prewarmed_keys,
+            "retries": self.retries,
+            "breaker_opens": self.breaker_opens,
+            "breaker_closes": self.breaker_closes,
+            "host_losses": self.host_losses,
             "max_queue_depth": self.max_queue_depth,
             "p50_round_latency_s": _quantile(self.round_latencies, 0.50),
             "p99_round_latency_s": _quantile(self.round_latencies, 0.99),

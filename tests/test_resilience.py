@@ -1,0 +1,613 @@
+"""Fault-tolerant serving (:mod:`repro.serve.resilience`).
+
+Part A — host-side pieces, no devices: the injection-schedule house
+primitive (and ``FailurePlan`` back-compat), the shared
+training/serving ``RetryLedger`` (deterministic no-``random`` backoff),
+the circuit-breaker state machine, seeded chaos plans (hypothesis tier:
+every seed yields the same reproducible 3-fault plan), the head-of-queue
+``push_front`` requeue on both formers, breaker fast-fail at admission,
+and the ``_inflight_demand`` leak/double-finish regression.
+
+Part B (subprocess, 8 fake host devices) — the chaos parity contract:
+
+* a seeded ``ServeFailurePlan`` injecting one launch fault, one
+  device-side fault and one host loss at fixed launch indices leaves
+  ``ProgramServer.run`` with exactly one response per request, every
+  retried request served **bit-identical** to the fault-free run, the
+  ledger exact with retries counted, the circuit breaker observed
+  opening and re-closing, and zero extra re-traces for the unaffected
+  shape class (only the class with queued traffic re-prewarms on the
+  shrunken fabric);
+* host loss with a non-empty inflight window poisons and relaunches the
+  window's riders on the survivors;
+* a mid-stream MoE dispatch fault (between two healthy graph batches)
+  keeps responses streaming in launch order with an intact ledger, both
+  terminal (``max_retries=0``) and retried;
+* deadlines fail non-retriably with a distinct reason; exhausted retry
+  budgets say how many retries were burned; backoff really waits.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Part A: host-side pieces
+# ---------------------------------------------------------------------------
+
+def test_injection_schedule_fires_once_and_records():
+    from repro.runtime.fault_tolerance import (InjectedFailure,
+                                               InjectionSchedule)
+    sched = InjectionSchedule(at={3: "ici-timeout", 5: "preemption"})
+    assert sched.peek(3) == "ici-timeout"      # peek does not consume
+    assert not sched.exhausted
+    assert sched.due(1) is None
+    assert sched.due(3) == "ici-timeout"
+    assert sched.due(3) is None                # fires exactly once
+    with pytest.raises(InjectedFailure, match="preemption at step 5"):
+        sched.check(5)
+    assert sched.exhausted
+    assert sched.fired == [(3, "ici-timeout"), (5, "preemption")]
+
+
+def test_failure_plan_backcompat_constructor():
+    """The historical FailurePlan(at_steps=...) surface keeps working on
+    top of InjectionSchedule — same check() message, same pop-once."""
+    from repro.runtime.fault_tolerance import FailurePlan, InjectedFailure
+    p = FailurePlan(at_steps={7: "ici-timeout"})
+    assert p.at_steps == {7: "ici-timeout"} and p.at_steps is p.at
+    p.check(6)                                  # not due: no raise
+    with pytest.raises(InjectedFailure, match="ici-timeout at step 7"):
+        p.check(7)
+    p.check(7)                                  # consumed
+    assert p.exhausted
+    assert FailurePlan().at_steps == {}
+
+
+def test_serve_failure_plan_validates_kinds():
+    from repro.serve import FAULT_KINDS, ServeFailurePlan
+    ServeFailurePlan(at={0: k for k in []})     # empty is fine
+    ServeFailurePlan(at=dict(enumerate(FAULT_KINDS)))
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        ServeFailurePlan(at={0: "meteor"})
+    assert ServeFailurePlan(at={2: "launch"}).noun == "launch"
+
+
+def test_retry_ledger_shared_counting_rule():
+    from repro.runtime.fault_tolerance import RetryLedger
+    led = RetryLedger(max_retries=2)
+    assert led.attempt(9) == 0
+    assert led.record_failure(9)                # retry 1 granted
+    assert led.record_failure(9)                # retry 2 granted
+    assert not led.record_failure(9)            # budget exhausted
+    assert led.attempt(9) == 3
+    assert led.total_retries == 2               # only GRANTED retries
+    led.clear(9)
+    assert led.attempt(9) == 0 and not led.attempts
+    assert led.total_retries == 2               # aggregate survives clear
+    # max_retries=0: first failure is terminal, nothing ever granted
+    led0 = RetryLedger(max_retries=0)
+    assert not led0.record_failure(1) and led0.total_retries == 0
+
+
+@settings(max_examples=25)
+@given(key=st.integers(0, 10_000), attempts=st.integers(1, 4))
+def test_retry_ledger_backoff_deterministic_no_random(key, attempts):
+    """Backoff is a pure function of (key, attempt): exponential in the
+    attempt, jittered by an integer hash of the key — zero randomness,
+    so a replayed chaos run waits identical delays."""
+    from repro.runtime.fault_tolerance import RetryLedger
+    a = RetryLedger(max_retries=10, backoff_base_s=0.25)
+    b = RetryLedger(max_retries=10, backoff_base_s=0.25)
+    for _ in range(attempts):
+        a.record_failure(key)
+        b.record_failure(key)
+    assert a.backoff_s(key) == b.backoff_s(key)
+    base = 0.25 * 2.0 ** (attempts - 1)
+    assert base <= a.backoff_s(key) < 2 * base  # jitter in [0, 1)
+    assert RetryLedger(max_retries=1).backoff_s(key) == 0.0  # base 0
+
+
+def test_circuit_breaker_state_machine():
+    from repro.serve.resilience import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
+                                        BREAKER_OPEN, CircuitBreaker)
+    br = CircuitBreaker(threshold=2, klass=("sssp", "wiki"))
+    assert br.allows_launch() and br.state == BREAKER_CLOSED
+    assert not br.record_failure()              # 1 of 2: still closed
+    assert not br.record_success()              # success resets the run
+    assert not br.record_failure()
+    assert br.record_failure()                  # 2 consecutive: OPEN
+    assert br.state == BREAKER_OPEN and br.opens == 1
+    assert br.allows_launch()                   # the half-open probe
+    assert br.state == BREAKER_HALF_OPEN
+    assert not br.allows_launch()               # probe in flight: hold
+    assert br.record_failure()                  # probe fails: re-OPEN —
+    assert br.state == BREAKER_OPEN             # each trip counts
+    assert br.opens == 2
+    assert br.allows_launch()                   # second probe
+    assert br.record_success()                  # closes
+    assert br.state == BREAKER_CLOSED and br.closes == 1
+    assert "sssp/wiki" in br.reject_reason()
+
+
+@settings(max_examples=30)
+@given(seed=st.integers(0, 500), n_launches=st.integers(3, 32))
+def test_seeded_chaos_plan_reproducible(seed, n_launches):
+    """The CI chaos-smoke seed contract: any seed yields the same plan
+    in any process — 3 distinct in-range indices, one fault of each
+    kind, the host loss last (the shrunken fabric serves the tail)."""
+    from repro.serve import (FAULT_DEVICE, FAULT_HOST_LOSS, FAULT_LAUNCH,
+                             seeded_chaos_plan)
+    a = seeded_chaos_plan(seed, n_launches, keep_devices=4)
+    b = seeded_chaos_plan(seed, n_launches, keep_devices=4)
+    assert a.at == b.at and a.keep_devices == 4
+    assert len(a.at) == 3
+    assert all(0 <= i < n_launches for i in a.at)
+    assert sorted(a.at.values()) == sorted(
+        [FAULT_LAUNCH, FAULT_DEVICE, FAULT_HOST_LOSS])
+    assert a.at[max(a.at)] == FAULT_HOST_LOSS
+    with pytest.raises(ValueError):
+        seeded_chaos_plan(seed, 2)
+
+
+def test_serve_options_resilience_validation():
+    from repro.serve import ServeOptions
+    ServeOptions(max_retries=3, backoff_base_s=0.5, deadline_s=10.0,
+                 breaker_threshold=2).resolve()
+    ServeOptions().resolve()                    # defaults: all off
+    for bad in (dict(max_retries=-1), dict(backoff_base_s=-0.1),
+                dict(deadline_s=0.0), dict(breaker_threshold=0)):
+        with pytest.raises(ValueError):
+            ServeOptions(**bad).resolve()
+
+
+class _E:
+    """Minimal former entry (the formers only read these attributes)."""
+
+    def __init__(self, tenant, klass, demand=1):
+        self.tenant, self.klass, self.demand = tenant, klass, demand
+
+
+def test_push_front_requeues_at_head_both_formers():
+    from repro.serve import DrrFormer, FifoFormer
+    for former in (FifoFormer(), DrrFormer()):
+        a, b = _E("t0", ("bfs", "g")), _E("t1", ("bfs", "g"))
+        late = _E("t0", ("sssp", "g"))
+        former.push(late)
+        # a failed batch's riders are requeued in reverse so the batch
+        # order is restored ahead of everything already queued
+        for e in reversed([a, b]):
+            former.push_front(e)
+        assert len(former) == 3
+        assert former.pending_classes()[0] == ("bfs", "g")
+        assert set(former.pending_classes()) == {("bfs", "g"), ("sssp", "g")}
+        batch = former.form(lambda _e: 4)
+        assert batch == [a, b], type(former).__name__
+        assert former.form(lambda _e: 4) == [late]
+
+
+def test_breaker_fast_fails_submissions_retriably():
+    """A non-closed breaker rejects the class at admission — retriable,
+    naming the breaker, counted as rejected in the ledger — and leaves
+    other classes untouched."""
+    from repro.serve import ProgramServer, Request, STATUS_REJECTED
+    from repro.serve.resilience import BREAKER_OPEN, CircuitBreaker
+    from repro.sparse import datasets
+
+    class _FakeMesh:
+        devices = np.zeros(4)
+
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=7)
+    srv = ProgramServer(_FakeMesh(), {"g": g}, batch_width=2)
+    srv._breakers[("bfs", "g")] = CircuitBreaker(
+        threshold=1, klass=("bfs", "g"), state=BREAKER_OPEN, failures=1)
+    resp = srv.submit(Request(0, "acme", "bfs", "g", root=1))
+    assert resp is not None and resp.status == STATUS_REJECTED
+    assert resp.retriable
+    assert "circuit breaker open" in resp.reason
+    assert "bfs/g" in resp.reason
+    srv.stats.verify()                          # rejected is accounted
+    assert srv.stats.tenant("acme").rejected == 1
+    assert srv.submit(Request(1, "acme", "sssp", "g", root=1)) is None
+    assert srv.queue_depth == 1                 # breaker charged no budget
+
+
+def test_inflight_demand_drops_zeroed_keys_and_catches_double_finish():
+    """Regression: zeroed _inflight_demand slots must be deleted (a
+    resident server leaked one per tenant ever seen), and a negative
+    residue — the double-_finish signature — must assert loudly."""
+    from repro.serve import ProgramServer, Request
+    from repro.serve.engine import Response, STATUS_OK
+    from repro.sparse import datasets
+
+    class _FakeMesh:
+        devices = np.zeros(4)
+
+    g = datasets.erdos_renyi(32, avg_degree=3, seed=7)
+    srv = ProgramServer(_FakeMesh(), {"g": g}, batch_width=2)
+    assert srv.submit(Request(0, "acme", "bfs", "g", root=1)) is None
+    entry = srv._former.form(lambda _e: 2)[0]
+    srv._finish(entry, Response(0, "acme", STATUS_OK))
+    assert srv._inflight_demand == {}           # no leaked zero slot
+    with pytest.raises(AssertionError, match="double _finish"):
+        srv._finish(entry, Response(0, "acme", STATUS_OK))
+
+
+def test_run_training_uses_shared_retry_ledger(tmp_path):
+    """The dedupe satellite: run_training's restart counting now rides
+    RetryLedger — same grant rule as serving (n <= max_retries), same
+    result surface as before."""
+    import jax.numpy as jnp
+    from repro.runtime.fault_tolerance import (FailurePlan, InjectedFailure,
+                                               run_training)
+
+    def init_state():
+        return {"w": jnp.array([4.0])}, {"m": jnp.array([0.0])}
+
+    def step_fn(params, opt_state, batch):
+        params = {"w": params["w"] - 0.1 * batch}
+        return params, opt_state, {"loss": float(jnp.sum(params["w"]))}
+
+    res = run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                       total_steps=12, ckpt_dir=str(tmp_path / "a"),
+                       ckpt_every=4, max_restarts=3,
+                       failure_plan=FailurePlan(at_steps={5: "ici-timeout",
+                                                          9: "preemption"}))
+    assert res.final_step == 12 and res.restarts == 2
+    assert len(res.metrics_history) == 12
+    with pytest.raises(InjectedFailure):
+        run_training(step_fn, init_state, lambda s: jnp.array(1.0),
+                     total_steps=6, ckpt_dir=str(tmp_path / "b"),
+                     ckpt_every=100, max_restarts=1,
+                     failure_plan=FailurePlan(
+                         at_steps={0: "a", 1: "b", 2: "c"}))
+
+
+# ---------------------------------------------------------------------------
+# Part B: chaos parity under shard_map (subprocess, 8 fake devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json
+import time
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.sparse import datasets, program
+from repro.serve import (ProgramServer, Request, ServeFailurePlan,
+                         ServeOptions, STATUS_OK)
+
+res = {}
+g = datasets.wiki_like(192, avg_degree=6, seed=3)
+mesh = make_mesh((8,), ('data',))
+WIDTH = 4
+TENANTS = ['acme', 'globex', 'initech', 'umbrella']
+# 8 sssp then 8 bfs: two fused batches per class, deterministic order
+reqs = ([Request(i, TENANTS[i % 4], 'sssp', 'wiki', root=(i * 13) % g.n)
+         for i in range(8)]
+        + [Request(8 + i, TENANTS[i % 4], 'bfs', 'wiki',
+                   root=(i * 7) % g.n) for i in range(8)])
+
+def _sig(rs):
+    return [(r.req_id, r.tenant, r.status, r.retriable,
+             None if r.result is None else r.result.tobytes())
+            for r in sorted(rs, key=lambda r: r.req_id)]
+
+def _ledger(s):
+    return {t: (v.submitted, v.served, v.rejected, v.failed, v.retries)
+            for t, v in s.stats.tenants.items()}
+
+# ---- fault-free reference on the full 8-device fabric ------------------
+program.clear_cache()
+ref = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH)
+ref.prewarm(('bfs', 'sssp'))
+ref_resps = ref.run(reqs)
+ref.stats.verify()
+ref_sig = _sig(ref_resps)
+res['ref'] = {'statuses': [r.status for r in ref_resps],
+              'launches': ref.stats.launches}
+
+# ---- chaos parity: launch fault @0, device fault @2, host loss @4 ------
+# Expected walk (depth 1, FIFO, breaker threshold 1, zero backoff):
+#   idx0 sssp A: injected launch fault -> breaker sssp/wiki OPENS,
+#        riders requeued head-of-queue (4 retries)
+#   idx1 sssp A again as the half-open probe: OK -> breaker CLOSES
+#   idx2 sssp B: injected device fault surfacing at harvest -> OPENS
+#   idx3 sssp B probe: OK -> CLOSES
+#   idx4 bfs C: host loss BEFORE launch -> fabric 8 -> 4, riders
+#        requeued, ONLY bfs/wiki (the class with queued traffic)
+#        re-prewarms on the survivors; relaunch consumes idx4
+#   idx5 bfs D: OK on the shrunken fabric
+program.clear_cache()
+plan = ServeFailurePlan(at={0: 'launch', 2: 'device', 4: 'host_loss'},
+                        keep_devices=4)
+srv = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                    serve_options=ServeOptions(max_retries=3,
+                                               breaker_threshold=1),
+                    failure_plan=plan)
+srv.prewarm(('bfs', 'sssp'))
+t0 = program.cache_stats()
+resps = srv.run(reqs)
+t1 = program.cache_stats()
+srv.stats.verify()
+snap = srv.stats.snapshot()
+res['chaos'] = {
+    'n_responses': len(resps),
+    'statuses': [r.status for r in resps],
+    'sig_equal': _sig(resps) == ref_sig,
+    'per_req_retries': [r.retries for r in resps],
+    'ledger': _ledger(srv),
+    'retries': snap['retries'],
+    'breaker_opens': snap['breaker_opens'],
+    'breaker_closes': snap['breaker_closes'],
+    'host_losses': snap['host_losses'],
+    'plan_exhausted': plan.exhausted,
+    'fired': plan.fired,
+    'n_devices_after': srv.fabric.n_devices,
+    'total_traces': program.cache_stats()['kernel_traces'],
+    'stream_traces': t1['kernel_traces'] - t0['kernel_traces'],
+    'inflight_demand': srv._inflight_demand,
+    'retry_ledger_entries': len(srv._retry.attempts),
+    'depth_samples': len(srv.stats.queue_depth_samples),
+    'min_depth_sample': min(srv.stats.queue_depth_samples),
+    'max_queue_depth': snap['max_queue_depth'],
+}
+
+# ---- host loss with a NON-empty inflight window (depth 2) --------------
+# NOTE: the compile cache deliberately carries over from scenario 1 —
+# bfs@4dev is already cached there, so THIS shrink re-prewarms with
+# zero new traces (prewarm-or-cached, never a forced re-trace)
+mesh_b = make_mesh((8,), ('data',))
+plan_b = ServeFailurePlan(at={1: 'host_loss'}, keep_devices=4)
+srv_b = ProgramServer(mesh_b, {'wiki': g}, batch_width=WIDTH,
+                      serve_options=ServeOptions(inflight_depth=2,
+                                                 max_retries=1),
+                      failure_plan=plan_b)
+srv_b.prewarm(('bfs',), ('wiki',))
+t0 = program.cache_stats()
+b_reqs = [Request(i, TENANTS[i % 4], 'bfs', 'wiki', root=(i * 7) % g.n)
+          for i in range(8)]
+b_resps = srv_b.run(b_reqs)
+t1 = program.cache_stats()
+srv_b.stats.verify()
+b_ref = {r.req_id: (None if r.result is None else r.result.tobytes())
+         for r in ref_resps if r.req_id >= 8}
+res['window_loss'] = {
+    'statuses': [r.status for r in b_resps],
+    'identical': all(b_resps[i].result.tobytes() == b_ref[8 + i]
+                     for i in range(8)),
+    'retries': srv_b.stats.retries,
+    'host_losses': srv_b.stats.host_losses,
+    'n_devices_after': srv_b.fabric.n_devices,
+    # bfs@4dev was traced by scenario 1's re-prewarm into the SAME
+    # process-wide cache: this shrink re-prewarms without re-tracing
+    'stream_traces': t1['kernel_traces'] - t0['kernel_traces'],
+}
+
+# ---- deadline: fails non-retriably with a distinct reason --------------
+srv_d = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                      serve_options=ServeOptions(deadline_s=1e-6))
+d_resps = srv_d.run([Request(i, 't', 'bfs', 'wiki', root=i)
+                     for i in range(2)])
+time.sleep(0.001)
+srv_d.stats.verify()
+res['deadline'] = {
+    'statuses': [r.status for r in d_resps],
+    'retriable': [r.retriable for r in d_resps],
+    'reasons': [r.reason for r in d_resps],
+    'ledger': _ledger(srv_d)}
+
+# ---- retry budget exhausted: terminal failure names the count ----------
+srv_x = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                      serve_options=ServeOptions(max_retries=2),
+                      failure_plan=ServeFailurePlan(
+                          at={0: 'launch', 1: 'launch', 2: 'launch'}))
+x_resps = srv_x.run([Request(i, TENANTS[i], 'bfs', 'wiki', root=1 + i)
+                     for i in range(4)])
+srv_x.stats.verify()
+res['exhausted'] = {
+    'statuses': [r.status for r in x_resps],
+    'retriable': [r.retriable for r in x_resps],
+    'reasons': [r.reason for r in x_resps],
+    'per_req_retries': [r.retries for r in x_resps],
+    'retries': srv_x.stats.retries,
+    'ledger': _ledger(srv_x)}
+
+# ---- backoff really waits (deterministic jitter, no random) ------------
+srv_w = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH,
+                      serve_options=ServeOptions(max_retries=1,
+                                                 backoff_base_s=0.05),
+                      failure_plan=ServeFailurePlan(at={0: 'launch'}))
+tw0 = time.perf_counter()
+w_resps = srv_w.run([Request(i, TENANTS[i], 'bfs', 'wiki', root=1)
+                     for i in range(4)])
+elapsed = time.perf_counter() - tw0
+srv_w.stats.verify()
+res['backoff'] = {'statuses': [r.status for r in w_resps],
+                  'elapsed': elapsed, 'retries': srv_w.stats.retries}
+
+# ---- MoE lane mid-stream fault: launch-order streaming intact ----------
+class StubMoE:
+    '''Engine-facing MoEService contract (batch/demand/prewarm/dispatch)
+    without a model: dispatch doubles the payload. The injected fault
+    fires in _step_moe BEFORE dispatch, which is the seam under test.'''
+    def __init__(self, batch=2):
+        self.batch = batch
+        self.calls = 0
+    def demand(self, payload):
+        return int(payload.shape[0])
+    def prewarm(self, mesh):
+        pass
+    def dispatch(self, payloads, mesh):
+        self.calls += 1
+        return [p * 2.0 for p in payloads], self.calls > 1
+
+payloads = [np.full((4, 8), 1.0 + i, np.float32) for i in range(2)]
+m_reqs = ([Request(i, f'a{i}', 'bfs', 'wiki', root=1) for i in range(4)]
+          + [Request(4 + i, f'm{i}', 'moe', payload=payloads[i])
+             for i in range(2)]
+          + [Request(6 + i, f'b{i}', 'bfs', 'wiki', root=2)
+             for i in range(4)])
+for retries, key in ((0, 'moe_terminal'), (1, 'moe_retried')):
+    stub = StubMoE()
+    srv_m = ProgramServer(mesh, {'wiki': g}, batch_width=WIDTH, moe=stub,
+                          serve_options=ServeOptions(max_retries=retries),
+                          failure_plan=ServeFailurePlan(at={1: 'moe'}))
+    for r in m_reqs:
+        assert srv_m.submit(r) is None
+    drained = srv_m.drain()          # launch order, NOT req_id-sorted
+    srv_m.stats.verify()
+    ok_moe = [r for r in drained if r.tenant.startswith('m')
+              and r.status == STATUS_OK]
+    res[key] = {
+        'drain_ids': [r.req_id for r in drained],
+        'statuses_by_id': [r.status for r in
+                           sorted(drained, key=lambda r: r.req_id)],
+        'reasons': [r.reason for r in drained if r.status != STATUS_OK],
+        'moe_results_doubled': all(
+            np.array_equal(r.result, payloads[r.req_id - 4] * 2.0)
+            for r in ok_moe),
+        'dispatch_calls': stub.calls,
+        'retries': srv_m.stats.retries,
+        'ledger': _ledger(srv_m)}
+
+print('RESULT ' + json.dumps(res))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_chaos_parity_every_request_served_bit_identical(results):
+    """The acceptance contract: one response per request, all OK, every
+    result byte-equal to the fault-free run — across a launch fault, a
+    device fault and a host loss."""
+    assert results["ref"]["statuses"] == ["ok"] * 16
+    c = results["chaos"]
+    assert c["n_responses"] == 16
+    assert c["statuses"] == ["ok"] * 16
+    assert c["sig_equal"]                      # bit-identical survivors
+    assert c["plan_exhausted"]
+    assert [k for _i, k in c["fired"]] == ["launch", "device", "host_loss"]
+    assert c["n_devices_after"] == 4           # the shrink really happened
+
+
+def test_chaos_parity_ledger_and_retry_accounting(results):
+    c = results["chaos"]
+    # every rider of the three poisoned batches retried exactly once
+    assert c["retries"] == 12
+    assert c["per_req_retries"] == [1] * 12 + [0] * 4
+    for t, (sub, served, rej, failed, retries) in c["ledger"].items():
+        assert (sub, served, rej, failed) == (4, 4, 0, 0), t
+        assert retries == 3, t                 # 3 poisoned batches / 4 ten.
+    # terminal outcomes emptied the retry ledger and the demand tracker
+    assert c["retry_ledger_entries"] == 0
+    assert c["inflight_demand"] == {}
+
+
+def test_chaos_breaker_opens_and_recloses(results):
+    c = results["chaos"]
+    assert c["breaker_opens"] == 2             # launch fault + device fault
+    assert c["breaker_closes"] == 2            # both half-open probes OK
+    assert c["host_losses"] == 1
+
+
+def test_chaos_zero_extra_retraces_for_unaffected_classes(results):
+    """After the host loss only bfs/wiki (the class with queued traffic)
+    re-prewarms on the shrunken fabric: 2 prewarm traces + 1 re-prewarm
+    trace, sssp/wiki NEVER re-traced."""
+    c = results["chaos"]
+    assert c["total_traces"] == 3
+    assert c["stream_traces"] == 1             # exactly the bfs re-prewarm
+
+
+def test_chaos_queue_depth_trace_observed_in_step(results):
+    """The S2 fix: formation-time observations make the drawdown
+    visible — the trace must reach 0 during drain, not only rise."""
+    c = results["chaos"]
+    assert c["min_depth_sample"] == 0
+    assert c["depth_samples"] > 16             # submits + formations
+    assert c["max_queue_depth"] >= 12
+
+
+def test_host_loss_poisons_and_relaunches_inflight_window(results):
+    w = results["window_loss"]
+    assert w["statuses"] == ["ok"] * 8
+    assert w["identical"]                      # bit-identical on 4 devices
+    assert w["retries"] == 8                   # window riders + formed batch
+    assert w["host_losses"] == 1
+    assert w["n_devices_after"] == 4
+    assert w["stream_traces"] == 0             # bfs@4dev already cached
+
+
+def test_deadline_fails_nonretriably_with_distinct_reason(results):
+    d = results["deadline"]
+    assert d["statuses"] == ["failed"] * 2
+    assert d["retriable"] == [False] * 2
+    assert all("deadline 1e-06s exceeded" in r for r in d["reasons"])
+    for sub, served, rej, failed, retries in d["ledger"].values():
+        assert (sub, served, rej, failed, retries) == (2, 0, 0, 2, 0)
+
+
+def test_retry_budget_exhaustion_names_the_count(results):
+    x = results["exhausted"]
+    assert x["statuses"] == ["failed"] * 4
+    assert x["retriable"] == [False] * 4
+    assert all("launch fault at launch 2" in r
+               and "[failed after 2 retries]" in r for r in x["reasons"])
+    assert x["per_req_retries"] == [2] * 4
+    assert x["retries"] == 8                   # 2 granted retries x 4 riders
+    for sub, served, rej, failed, retries in x["ledger"].values():
+        assert (sub, served, rej, failed, retries) == (1, 0, 0, 1, 2)
+
+
+def test_backoff_actually_waits(results):
+    b = results["backoff"]
+    assert b["statuses"] == ["ok"] * 4
+    assert b["retries"] == 4
+    assert b["elapsed"] >= 0.05                # base delay really elapsed
+
+
+def test_moe_midstream_fault_streams_in_launch_order(results):
+    """The S3 satellite: an MoE batch failing between two healthy graph
+    batches neither reorders the stream nor corrupts the ledger."""
+    t = results["moe_terminal"]
+    # drain order == launch order: graph batch, MoE batch, graph batch
+    assert t["drain_ids"] == [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]
+    assert t["statuses_by_id"] == (["ok"] * 4 + ["failed"] * 2 + ["ok"] * 4)
+    assert all("moe fault at launch 1 (moe)" in r for r in t["reasons"])
+    assert t["dispatch_calls"] == 0            # fault fired before dispatch
+    assert t["retries"] == 0
+    for tenant, (sub, served, rej, failed, _r) in t["ledger"].items():
+        expect = (1, 0, 0, 1) if tenant.startswith("m") else (1, 1, 0, 0)
+        assert (sub, served, rej, failed) == expect, tenant
+
+
+def test_moe_midstream_fault_retried_to_success(results):
+    r = results["moe_retried"]
+    # the retried MoE batch relaunches right after its failure — still
+    # in launch order, before the trailing graph batch
+    assert r["drain_ids"] == [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]
+    assert r["statuses_by_id"] == ["ok"] * 10
+    assert r["moe_results_doubled"]
+    assert r["dispatch_calls"] == 1
+    assert r["retries"] == 2
+    for _t, (sub, served, rej, failed, _r2) in r["ledger"].items():
+        assert (sub, served, rej, failed) == (1, 1, 0, 0)
